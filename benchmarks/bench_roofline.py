@@ -1,0 +1,64 @@
+"""Roofline table: summarize the dry-run artifacts (§Roofline source).
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun) and
+emits one row per cell: the three terms, the bottleneck, the useful-FLOP
+ratio and roofline fraction.  Not a timing benchmark — the derived column
+carries the analysis.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_records(mesh: str | None = None):
+    records = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if "roofline" not in rec:  # e.g. the pipeline-demo artifact
+            continue
+        if mesh and rec["roofline"]["mesh"] != mesh:
+            continue
+        records.append(rec)
+    return records
+
+
+def run(quick: bool = True):
+    rows = []
+    for rec in load_records(mesh="pod"):
+        r = rec["roofline"]
+        name = f"roofline_{r['arch']}_{r['shape']}"
+        derived = (
+            f"bottleneck={r['bottleneck']};frac={r['roofline_fraction']:.4f};"
+            f"useful={r['useful_flops_ratio']:.3f};"
+            f"mem_gib={rec['memory_analysis']['peak_gib']:.1f}"
+        )
+        rows.append(f"{name},{r['step_time_s'] * 1e6:.1f},{derived}")
+    return rows
+
+
+def markdown_table(mesh: str = "pod") -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | bottleneck "
+        "| model/compiled | roofline frac | peak GiB |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load_records(mesh=mesh):
+        r = rec["roofline"]
+        m = rec["memory_analysis"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['bottleneck']} | {r['useful_flops_ratio']:.3f} | "
+            f"{r['roofline_fraction']:.4f} | {m['peak_gib']:.1f} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -1,0 +1,55 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only primes,...]
+
+Prints ``name,us_per_call,derived`` CSV.  quick mode (default) shrinks
+problem sizes so the suite completes in minutes on one CPU core; --full
+uses the paper's sizes (Table 1: primes to 20000/60000, Fateman ^20).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (
+    bench_chunking,
+    bench_pipeline,
+    bench_polymul,
+    bench_primes,
+    bench_roofline,
+)
+
+SUITES = {
+    "primes": bench_primes,      # Table 1 / Fig 3
+    "polymul": bench_polymul,    # Table 1 / Fig 4
+    "chunking": bench_chunking,  # §7 proposal
+    "pipeline": bench_pipeline,  # bubble model (DESIGN §2)
+    "roofline": bench_roofline,  # §Roofline table from dry-run artifacts
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    ap.add_argument("--only", default=None, help="comma-separated suite names")
+    args = ap.parse_args()
+
+    names = args.only.split(",") if args.only else list(SUITES)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        try:
+            rows = SUITES[name].run(quick=not args.full)
+            for row in rows:
+                print(row)
+            sys.stdout.flush()
+        except Exception as e:  # noqa: BLE001
+            failed.append((name, e))
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(f"benchmark suites failed: {[n for n, _ in failed]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""End-to-end serving example: continuous batching with chunked prefill
+on a reduced qwen3 config; prints throughput.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    serve_main([
+        "--arch", "qwen3-32b", "--smoke", "--requests", "12",
+        "--max-batch", "4", "--max-new", "8", "--prompt-len", "20",
+    ])

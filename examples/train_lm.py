@@ -1,0 +1,44 @@
+"""End-to-end LM training example: trains a reduced-config model on the
+synthetic corpus for a few hundred steps with checkpointing and fault
+tolerance, and verifies the loss decreases.
+
+Run (a ~25M-param model, a few minutes on CPU):
+    PYTHONPATH=src python examples/train_lm.py
+
+A larger (~100M) run, as the assignment's end-to-end driver:
+    PYTHONPATH=src python examples/train_lm.py --big
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--big", action="store_true", help="~100M params")
+    ap.add_argument("--steps", type=int, default=None)
+    args = ap.parse_args()
+
+    if args.big:
+        argv = [
+            "--arch", "olmo-1b", "--smoke", "--d-model", "640", "--layers", "16",
+            "--steps", str(args.steps or 300), "--global-batch", "8",
+            "--seq-len", "512", "--microbatches", "2",
+        ]
+    else:
+        argv = [
+            "--arch", "olmo-1b", "--smoke", "--d-model", "320", "--layers", "8",
+            "--steps", str(args.steps or 200), "--global-batch", "8",
+            "--seq-len", "256", "--microbatches", "2",
+        ]
+    history = train_main(argv)
+    first = sum(h["loss"] for h in history[:10]) / 10
+    last = sum(h["loss"] for h in history[-10:]) / 10
+    print(f"mean loss first-10 {first:.4f} -> last-10 {last:.4f}")
+    assert last < first, "loss did not decrease"
+    print("OK: loss decreased")
+
+
+if __name__ == "__main__":
+    main()

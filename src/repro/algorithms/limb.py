@@ -1,0 +1,109 @@
+"""Fixed-width multi-limb unsigned integers in JAX (base 2^13, int32 limbs).
+
+The paper's ``stream_big`` variant multiplies every coefficient by
+100000000001 (~2^37) "in order to increase the footprint of elementary
+operations" — JVM ``BigInteger`` arithmetic.  XLA has no arbitrary
+precision, so we carry fixed-width multi-limb integers: a number is
+``(L,)`` int32 limbs, little-endian, each in ``[0, 2^13)``.
+
+Base 2^13 keeps every intermediate inside int32 without x64:
+  * limb product  < 2^26
+  * sum of up to 32 limb products or carries < 2^31 ✓ (L ≤ 32 enforced)
+
+The limb count L is the *footprint knob*: L=4 (52 bits) for ``stream``,
+L=12 (156 bits) for ``stream_big`` — reproducing the paper's small/big
+coefficient regimes on SIMD hardware.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+LIMB_BITS = 13
+LIMB_BASE = 1 << LIMB_BITS
+LIMB_MASK = LIMB_BASE - 1
+MAX_LIMBS = 32
+
+
+def from_int(value: int, num_limbs: int) -> jnp.ndarray:
+    """Python int (arbitrary precision) -> limb vector. Raises on overflow."""
+    if value < 0:
+        raise ValueError("unsigned limb integers only")
+    limbs = []
+    v = int(value)
+    for _ in range(num_limbs):
+        limbs.append(v & LIMB_MASK)
+        v >>= LIMB_BITS
+    if v:
+        raise OverflowError(f"{value} does not fit in {num_limbs} limbs")
+    return jnp.asarray(limbs, jnp.int32)
+
+
+def to_int(limbs) -> int:
+    """Limb vector -> Python int (host-side; exact)."""
+    out = 0
+    for limb in reversed(np.asarray(limbs).tolist()):
+        out = (out << LIMB_BITS) | int(limb)
+    return out
+
+
+def normalize(raw: jnp.ndarray) -> jnp.ndarray:
+    """Carry-propagate (..., L) int32 limbs that may exceed the base.
+
+    A fixed L-1 sweep fully propagates carries produced by one add/mul
+    round (each carry is < base after the first sweep).
+    """
+    num_limbs = raw.shape[-1]
+    out = raw
+    for _ in range(num_limbs):  # full ripple worst case
+        carry = out >> LIMB_BITS
+        out = (out & LIMB_MASK) + jnp.concatenate(
+            [jnp.zeros_like(carry[..., :1]), carry[..., :-1]], axis=-1
+        )
+    # Any residual carry out of the top limb is overflow; truncated (mod 2^(13L)).
+    return out & LIMB_MASK
+
+
+def add(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(..., L) + (..., L) -> (..., L), mod 2^(13L)."""
+    return normalize(a + b)
+
+
+def mul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(..., L) * (..., L) -> (..., L) low limbs, mod 2^(13L).
+
+    Schoolbook convolution, accumulated per output limb with staged
+    normalization every 16 partial products to stay inside int32.
+    """
+    num_limbs = a.shape[-1]
+    if num_limbs > MAX_LIMBS:
+        raise ValueError(f"L={num_limbs} exceeds MAX_LIMBS={MAX_LIMBS}")
+    out = jnp.zeros(jnp.broadcast_shapes(a.shape, b.shape), jnp.int32)
+    acc = out
+    for j in range(num_limbs):
+        # a * b_j, shifted by j limbs; only low (L - j) limbs contribute.
+        prod = a[..., : num_limbs - j] * b[..., j : j + 1]
+        shifted = jnp.concatenate(
+            [jnp.zeros(prod.shape[:-1] + (j,), jnp.int32), prod], axis=-1
+        )
+        acc = acc + shifted
+        if (j + 1) % 16 == 0:
+            acc = normalize(acc)
+    return normalize(acc)
+
+
+def is_zero(a: jnp.ndarray) -> jnp.ndarray:
+    """(..., L) -> (...,) bool."""
+    return jnp.all(a == 0, axis=-1)
+
+
+def widen(a: jnp.ndarray, num_limbs: int) -> jnp.ndarray:
+    """Zero-extend (..., L) to (..., num_limbs)."""
+    pad = num_limbs - a.shape[-1]
+    if pad < 0:
+        raise ValueError("cannot narrow")
+    if pad == 0:
+        return a
+    return jnp.concatenate(
+        [a, jnp.zeros(a.shape[:-1] + (pad,), jnp.int32)], axis=-1
+    )

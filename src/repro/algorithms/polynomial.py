@@ -1,0 +1,370 @@
+"""Sparse multivariate polynomial multiplication as a Stream computation.
+
+The paper's second example (§6): multivariate polynomials in distributive
+representation, multiplied by decomposing into a stream of
+multiply-by-a-term-and-add operations::
+
+    def times(x: T, y: T) = (zero /: y) { (l, r) => l + multiply(x, a, b) }
+
+Representation (SIMD adaptation, see DESIGN.md §2):
+
+* A polynomial is ``Poly(keys, coeffs)`` with capacity N: ``keys`` int32
+  packed exponents (3 vars × 10 bits, graded by integer order — monomial
+  product = key add), ``coeffs`` (N, L) limb integers
+  (:mod:`repro.algorithms.limb`).  Absent terms have ``key == EMPTY_KEY``
+  (int32 max) so sorts push them to the back, and zero coefficients.
+* Terms are kept sorted ascending by key; the paper's descending-order
+  head/tail traversal maps to our merge direction, which is order-agnostic.
+* The paper forces the tail early when a term cancels (`Await.result` —
+  "not considered good in a regular use of Futures, but we have not been
+  able to avoid it").  In our masked-lane world cancellation just *clears a
+  lane* (key := EMPTY) — no blocking; SIMD strictly improves on the wart.
+
+Stream decomposition used here (paper Fig. 2): items are chunks of ``x``;
+cell j holds a chunk of ``y``'s terms; a cell multiplies its terms by the
+flowing x-chunk's partial accumulator... — precisely::
+
+    item b  = partial product accumulator for x-chunk b  (flows)
+    cell j  = y-term-chunk j: acc_b += multiply(x_b, m_j, c_j)
+
+Cells form the dependent `plus` chain the paper pipelines; different items
+(x-chunks) are independent, so the Future evaluator overlaps cell j on
+chunk b with cell j+1 on chunk b-1.  Final result = tree-add of the M
+partial accumulators.
+
+The ``list`` control (paper's parallel-collections baseline [4]) is
+:func:`times_dense`: one outer product + sort + segment-reduce.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.algorithms import limb
+from repro.core.chunking import chunk_axis
+from repro.core.stream import LazyEvaluator, StreamProgram, evaluate
+
+EMPTY_KEY = np.int32(np.iinfo(np.int32).max)
+VAR_BITS = 10
+NUM_VARS = 3
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Poly:
+    """Sparse polynomial with fixed capacity; invalid slots key=EMPTY_KEY."""
+
+    keys: jnp.ndarray  # (N,) int32
+    coeffs: jnp.ndarray  # (N, L) int32 limbs
+
+    @property
+    def capacity(self) -> int:
+        return self.keys.shape[0]
+
+    @property
+    def num_limbs(self) -> int:
+        return self.coeffs.shape[-1]
+
+
+def pack_key(exponents) -> int:
+    e = list(exponents) + [0] * (NUM_VARS - len(exponents))
+    key = 0
+    for x in e:
+        assert 0 <= x < (1 << VAR_BITS)
+        key = (key << VAR_BITS) | x
+    return key
+
+
+def unpack_key(key: int) -> tuple[int, ...]:
+    return tuple(
+        (int(key) >> (VAR_BITS * (NUM_VARS - 1 - i))) & ((1 << VAR_BITS) - 1)
+        for i in range(NUM_VARS)
+    )
+
+
+def from_dict(terms: dict[tuple[int, ...], int], capacity: int, num_limbs: int) -> Poly:
+    """Host-side constructor from {exponent-tuple: int coefficient}."""
+    items = sorted((pack_key(e), c) for e, c in terms.items())
+    if len(items) > capacity:
+        raise ValueError(f"{len(items)} terms exceed capacity {capacity}")
+    keys = np.full(capacity, EMPTY_KEY, np.int32)
+    coeffs = np.zeros((capacity, num_limbs), np.int32)
+    for i, (k, c) in enumerate(items):
+        keys[i] = k
+        coeffs[i] = np.asarray(limb.from_int(c, num_limbs))
+    return Poly(jnp.asarray(keys), jnp.asarray(coeffs))
+
+
+def to_dict(p: Poly) -> dict[tuple[int, ...], int]:
+    """Host-side exact extraction (Python bigints)."""
+    keys = np.asarray(p.keys)
+    coeffs = np.asarray(p.coeffs)
+    out: dict[tuple[int, ...], int] = {}
+    for i in range(keys.shape[0]):
+        if keys[i] == EMPTY_KEY:
+            continue
+        value = limb.to_int(coeffs[i])
+        if value:
+            out[unpack_key(int(keys[i]))] = out.get(unpack_key(int(keys[i])), 0) + value
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Core ops (all shape-static, jit-friendly)
+# ---------------------------------------------------------------------------
+
+
+def _mask_invalid(keys: jnp.ndarray, coeffs: jnp.ndarray):
+    """Clear lanes whose coefficient is zero (the paper's cancellation)."""
+    zero = limb.is_zero(coeffs)
+    keys = jnp.where(zero, EMPTY_KEY, keys)
+    coeffs = jnp.where(zero[..., None], 0, coeffs)
+    return keys, coeffs
+
+
+def multiply_term(p: Poly, m_key: jnp.ndarray, c_limbs: jnp.ndarray) -> Poly:
+    """The paper's ``multiply(x, m, c)``: p * (c * monomial m), vectorized."""
+    valid = p.keys != EMPTY_KEY
+    keys = jnp.where(valid, p.keys + m_key, EMPTY_KEY)
+    coeffs = limb.mul(p.coeffs, c_limbs[None, :])
+    keys, coeffs = _mask_invalid(keys, coeffs)
+    return Poly(keys, coeffs)
+
+
+def compact(p: Poly, capacity: int) -> Poly:
+    """Sort valid terms to the front; truncate/grow to ``capacity``."""
+    order = jnp.argsort(p.keys)
+    keys = p.keys[order]
+    coeffs = p.coeffs[order]
+    n = p.capacity
+    if capacity >= n:
+        keys = jnp.concatenate([keys, jnp.full((capacity - n,), EMPTY_KEY, jnp.int32)])
+        coeffs = jnp.concatenate(
+            [coeffs, jnp.zeros((capacity - n, p.num_limbs), jnp.int32)]
+        )
+    else:
+        # Truncation only sound if the tail is empty; callers size capacity.
+        keys = keys[:capacity]
+        coeffs = coeffs[:capacity]
+    return Poly(keys, coeffs)
+
+
+def plus(x: Poly, y: Poly, capacity: int | None = None) -> Poly:
+    """The paper's recursive merge-add, as sort + adjacent-combine.
+
+    Equal keys combine; cancellations clear lanes (no early force).
+    """
+    capacity = capacity or x.capacity
+    keys = jnp.concatenate([x.keys, y.keys])
+    coeffs = jnp.concatenate([x.coeffs, y.coeffs])
+    order = jnp.argsort(keys)
+    keys = keys[order]
+    coeffs = coeffs[order]
+    # Combine runs of equal keys.  Each input has unique keys, so runs have
+    # length <= 2: one adjacent-combine pass suffices.
+    same = jnp.concatenate(
+        [jnp.zeros((1,), bool), (keys[1:] == keys[:-1]) & (keys[1:] != EMPTY_KEY)]
+    )
+    shifted = jnp.concatenate([jnp.zeros_like(coeffs[:1]), coeffs[:-1]])
+    coeffs = jnp.where(same[:, None], limb.add(coeffs, shifted), coeffs)
+    # The first element of each combined pair is dead.
+    dead = jnp.concatenate([same[1:], jnp.zeros((1,), bool)])
+    keys = jnp.where(dead, EMPTY_KEY, keys)
+    coeffs = jnp.where(dead[:, None], 0, coeffs)
+    keys, coeffs = _mask_invalid(keys, coeffs)
+    return compact(Poly(keys, coeffs), capacity)
+
+
+def num_terms(p: Poly) -> jnp.ndarray:
+    return jnp.sum(p.keys != EMPTY_KEY)
+
+
+# ---------------------------------------------------------------------------
+# times() as a StreamProgram
+# ---------------------------------------------------------------------------
+
+
+def _flatten_poly(p: Poly):
+    return {"keys": p.keys, "coeffs": p.coeffs}
+
+
+def _unflatten_poly(d) -> Poly:
+    return Poly(d["keys"], d["coeffs"])
+
+
+def times_stream_program(
+    y: Poly,
+    terms_per_cell: int,
+    acc_capacity: int,
+) -> StreamProgram:
+    """Build the stream program for ``x * y``.
+
+    Cell j's state = y-term chunk j (keys (G,), coeffs (G, L)).  The item
+    flowing through is ``{x_chunk, acc}``; each cell does G
+    multiply-by-term-and-add steps (G = ``terms_per_cell`` is the paper §7
+    chunk-size knob).
+    """
+    if y.capacity % terms_per_cell != 0:
+        raise ValueError("y capacity not divisible by terms_per_cell")
+    num_cells = y.capacity // terms_per_cell
+    state = {
+        "keys": y.keys.reshape(num_cells, terms_per_cell),
+        "coeffs": y.coeffs.reshape(num_cells, terms_per_cell, y.num_limbs),
+    }
+
+    def cell_fn(cell_state, item):
+        x_chunk = _unflatten_poly(item["x"])
+        acc = _unflatten_poly(item["acc"])
+
+        def one_term(acc_d, term):
+            acc_p = _unflatten_poly(acc_d)
+            t_key, t_coeff = term
+            prod = multiply_term(x_chunk, t_key, t_coeff)
+            # Absent y-term (padding) => multiply_term yields all-EMPTY prod,
+            # so the add is a no-op; no control flow needed.
+            prod = Poly(
+                jnp.where(t_key == EMPTY_KEY, EMPTY_KEY, prod.keys),
+                jnp.where(t_key == EMPTY_KEY, 0, prod.coeffs),
+            )
+            return _flatten_poly(plus(acc_p, prod, acc_capacity)), None
+
+        acc_d, _ = jax.lax.scan(
+            one_term,
+            _flatten_poly(acc),
+            (cell_state["keys"], cell_state["coeffs"]),
+        )
+        return cell_state, {"x": item["x"], "acc": acc_d}
+
+    return StreamProgram(
+        cell_fn=cell_fn,
+        init_state=state,
+        num_cells=num_cells,
+        mutable_state=False,
+    )
+
+
+def times(
+    x: Poly,
+    y: Poly,
+    *,
+    evaluator=None,
+    num_x_chunks: int = 1,
+    terms_per_cell: int = 1,
+    acc_capacity: int | None = None,
+) -> Poly:
+    """Sparse product x*y via the stream-of-multiply-and-add decomposition.
+
+    ``evaluator=None`` → Lazy (the paper's sequential mode);
+    pass a :class:`FutureEvaluator` for the pipelined mode.
+    """
+    acc_capacity = acc_capacity or _product_capacity(x, y)
+    if x.capacity % num_x_chunks != 0:
+        raise ValueError("x capacity not divisible by num_x_chunks")
+    program = times_stream_program(y, terms_per_cell, acc_capacity)
+    items = {
+        "x": chunk_axis(_flatten_poly(x), num_x_chunks),
+        "acc": {
+            "keys": jnp.full((num_x_chunks, acc_capacity), EMPTY_KEY, jnp.int32),
+            "coeffs": jnp.zeros(
+                (num_x_chunks, acc_capacity, x.num_limbs), jnp.int32
+            ),
+        },
+    }
+    # Chunking x leaves EMPTY padding distributed arbitrarily; that's fine —
+    # multiply_term propagates EMPTY lanes.
+    _, out_items = evaluate(program, items, evaluator)
+    partials = [
+        Poly(out_items["acc"]["keys"][b], out_items["acc"]["coeffs"][b])
+        for b in range(num_x_chunks)
+    ]
+    acc = partials[0]
+    for p in partials[1:]:
+        acc = plus(acc, p, acc_capacity)
+    return acc
+
+
+def _product_capacity(x: Poly, y: Poly) -> int:
+    cap = x.capacity * y.capacity
+    return int(min(cap, 1 << 15))
+
+
+# ---------------------------------------------------------------------------
+# The "list" control: data-parallel outer product (paper's baseline [4])
+# ---------------------------------------------------------------------------
+
+
+def times_dense(x: Poly, y: Poly, capacity: int | None = None) -> Poly:
+    """Parallel-collections analogue: all |x|·|y| term products at once.
+
+    Outer product of keys/coeffs, then a single sort + segmented combine.
+    This is the classical well-optimized baseline the paper compares
+    against (its ``list`` rows).
+    """
+    capacity = capacity or _product_capacity(x, y)
+    kx, ky = x.keys, y.keys
+    valid = (kx[:, None] != EMPTY_KEY) & (ky[None, :] != EMPTY_KEY)
+    keys = jnp.where(valid, kx[:, None] + ky[None, :], EMPTY_KEY).reshape(-1)
+    coeffs = limb.mul(x.coeffs[:, None, :], y.coeffs[None, :, :]).reshape(
+        -1, x.num_limbs
+    )
+    coeffs = jnp.where(valid.reshape(-1, 1), coeffs, 0)
+    order = jnp.argsort(keys)
+    keys = keys[order]
+    coeffs = coeffs[order]
+    # Segmented reduce of equal-key runs (runs can be long): log-step
+    # prefix-combine on sorted keys.
+    n = keys.shape[0]
+    steps = max(1, int(np.ceil(np.log2(max(n, 2)))))
+    seg_sum = coeffs
+    for shift in [1 << s for s in range(steps)]:
+        prev_key = jnp.concatenate([jnp.full((shift,), -1, jnp.int32), keys[:-shift]])
+        prev_sum = jnp.concatenate([jnp.zeros_like(seg_sum[:shift]), seg_sum[:-shift]])
+        take = prev_key == keys
+        seg_sum = jnp.where(take[:, None], limb.add(seg_sum, prev_sum), seg_sum)
+    # Keep only the last element of each run (holds the full segment sum).
+    next_key = jnp.concatenate([keys[1:], jnp.full((1,), -1, jnp.int32)])
+    last = keys != next_key
+    keys = jnp.where(last & (keys != EMPTY_KEY), keys, EMPTY_KEY)
+    coeffs = jnp.where((keys != EMPTY_KEY)[:, None], seg_sum, 0)
+    keys, coeffs = _mask_invalid(keys, coeffs)
+    return compact(Poly(keys, coeffs), capacity)
+
+
+# ---------------------------------------------------------------------------
+# Test-case generator (Fateman benchmark, as cited by the paper [2])
+# ---------------------------------------------------------------------------
+
+
+def fateman_poly(power: int, capacity: int, num_limbs: int, big_factor: int = 1) -> Poly:
+    """(1 + x + y + z)^power, coefficients optionally scaled by big_factor.
+
+    ``big_factor=100000000001`` reproduces the paper's ``stream_big``.
+    Built host-side with exact Python ints.
+    """
+    terms: dict[tuple[int, ...], int] = {(0, 0, 0): 1}
+    for _ in range(power):
+        new: dict[tuple[int, ...], int] = {}
+        for (a, b, c), coef in terms.items():
+            for d in ((0, 0, 0), (1, 0, 0), (0, 1, 0), (0, 0, 1)):
+                key = (a + d[0], b + d[1], c + d[2])
+                new[key] = new.get(key, 0) + coef
+        terms = new
+    if big_factor != 1:
+        terms = {k: v * big_factor for k, v in terms.items()}
+    return from_dict(terms, capacity, num_limbs)
+
+
+def reference_product(
+    x_terms: dict[tuple[int, ...], int], y_terms: dict[tuple[int, ...], int]
+) -> dict[tuple[int, ...], int]:
+    """Exact oracle with Python bigints."""
+    out: dict[tuple[int, ...], int] = {}
+    for ex, cx in x_terms.items():
+        for ey, cy in y_terms.items():
+            key = tuple(a + b for a, b in zip(ex, ey))
+            out[key] = out.get(key, 0) + cx * cy
+    return {k: v for k, v in out.items() if v}

@@ -1,0 +1,105 @@
+"""The paper's prime sieve (§5) as a Stream computation.
+
+Original (deliberately naive — "it scans every divisor of a number up to
+the number itself", the paper keeps it because it is *parallelizable*)::
+
+    def sieve(s: Stream[Int]): Stream[Int] =
+      s match { case head#::tail =>
+        head#::tail.map(s => sieve(s.filter { _ % head != 0 })) }
+
+i.e. a growing chain of filter cells, one per prime found.  SIMD
+adaptation: candidates flow through the chain in *blocks* (bounded stream,
+as the paper's own Future version: ``Stream.range(2, n, 1)``); each cell
+owns up to ``primes_per_cell`` primes (the §7 chunk-size knob — K=1 is the
+paper's original fine-grained cell).  A cell filters the incoming block by
+its primes and claims new primes from the surviving front of the block if
+it still has free slots.
+
+Under :class:`LazyEvaluator` this is the paper's sequential sieve; under
+:class:`FutureEvaluator` block b is filtered by cell j while cell j+1
+filters block b-1 — the pipeline of Figure 1.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from jax import lax
+
+from repro.core.stream import StreamProgram, evaluate
+
+
+def sieve_program(num_cells: int, primes_per_cell: int = 1) -> StreamProgram:
+    """Cells with state (primes (K,), int32; 0 = free slot)."""
+
+    def cell_fn(state, item):
+        primes = state  # (K,)
+        values, valid = item["values"], item["valid"]
+
+        def slot(carry, p):
+            values, valid = carry
+            # If this slot already holds a prime, filter by it; otherwise
+            # claim the first survivor (which is prime: it survived every
+            # earlier prime's filter) and filter by it.
+            has_any = jnp.any(valid)
+            first = jnp.argmax(valid)
+            candidate = values[first]
+            new_p = jnp.where((p == 0) & has_any, candidate, p)
+            keep = jnp.where(
+                new_p > 0,
+                valid & (values % jnp.maximum(new_p, 1) != 0),
+                valid,
+            )
+            return (values, keep), new_p
+
+        (values, valid), new_primes = lax.scan(slot, (values, valid), primes)
+        return new_primes, {"values": values, "valid": valid}
+
+    init = jnp.zeros((num_cells, primes_per_cell), jnp.int32)
+    return StreamProgram(cell_fn, init, num_cells)
+
+
+def run_sieve(
+    limit: int,
+    *,
+    block_size: int = 256,
+    primes_per_cell: int = 1,
+    num_cells: int | None = None,
+    evaluator=None,
+):
+    """All primes < ``limit``.  Returns (primes int32[num_slots], count)."""
+    # Upper bound on pi(limit): enough cell slots to hold every prime.
+    if num_cells is None:
+        bound = int(_pi_upper_bound(limit))
+        num_cells = -(-bound // primes_per_cell)
+    program = sieve_program(num_cells, primes_per_cell)
+    n = limit - 2
+    num_blocks = -(-n // block_size)
+    values = np.arange(2, 2 + num_blocks * block_size, dtype=np.int32)
+    valid = values < limit
+    items = {
+        "values": jnp.asarray(values.reshape(num_blocks, block_size)),
+        "valid": jnp.asarray(valid.reshape(num_blocks, block_size)),
+    }
+    states, _ = evaluate(program, items, evaluator)
+    primes = states.reshape(-1)
+    count = jnp.sum(primes > 0)
+    return primes, count
+
+
+def _pi_upper_bound(limit: int) -> float:
+    """pi(x) < 1.3 x / ln x for x >= 17 (Rosser–Schoenfeld)."""
+    if limit < 17:
+        return 8
+    return 1.3 * limit / np.log(limit)
+
+
+def reference_primes(limit: int) -> np.ndarray:
+    """Classic Eratosthenes oracle (numpy, host)."""
+    mask = np.ones(limit, bool)
+    mask[:2] = False
+    for p in range(2, int(limit**0.5) + 1):
+        if mask[p]:
+            mask[p * p :: p] = False
+    return np.nonzero(mask)[0].astype(np.int32)

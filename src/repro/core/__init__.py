@@ -1,0 +1,59 @@
+"""Core: the paper's Stream-with-Future construct, in JAX.
+
+Public API:
+  StreamProgram, LazyEvaluator, FutureEvaluator, evaluate
+  Future, defer, HostFuture, collective futures
+  ChunkPolicy, bubble_fraction, optimal_num_chunks
+  PipelineConfig, pipeline_apply
+"""
+from repro.core.chunking import (
+    ChunkPolicy,
+    bubble_fraction,
+    chunk_axis,
+    optimal_num_chunks,
+    pipeline_step_time,
+    unchunk_axis,
+)
+from repro.core.future import (
+    Future,
+    HostFuture,
+    all_gather_future,
+    defer,
+    ppermute_future,
+    psum_scatter_future,
+)
+from repro.core.pipeline import (
+    PipelineConfig,
+    merge_stages,
+    pipeline_apply,
+    split_stages,
+)
+from repro.core.stream import (
+    FutureEvaluator,
+    LazyEvaluator,
+    StreamProgram,
+    evaluate,
+)
+
+__all__ = [
+    "ChunkPolicy",
+    "Future",
+    "FutureEvaluator",
+    "HostFuture",
+    "LazyEvaluator",
+    "PipelineConfig",
+    "StreamProgram",
+    "all_gather_future",
+    "bubble_fraction",
+    "chunk_axis",
+    "defer",
+    "evaluate",
+    "merge_stages",
+    "optimal_num_chunks",
+    "pipeline_apply",
+    "pipeline_step_time",
+    "ppermute_future",
+    "psum_scatter_future",
+    "split_stages",
+    "unchunk_axis",
+]

@@ -1,0 +1,118 @@
+"""Chunk-size policy — the paper's §7 proposal, implemented.
+
+The paper's evaluation found that fine-grained stream cells do not scale
+("the minimum size of elementary computations seems to be a key factor")
+and proposed *grouping these in bigger chunks* as future work.  On a TPU
+pipeline the trade-off is exact:
+
+* With S stages and M chunks (microbatches), the fill/drain bubble wastes
+  ``(S-1)/(M+S-1)`` of the schedule — more chunks amortize it.
+* Each chunk pays a fixed per-cell overhead ``c`` (dispatch, collective
+  latency, kernel launch on GPU / loop control on TPU); fewer, bigger
+  chunks amortize *that*.
+* Per-stage memory holds ``O(chunk_bytes)`` in-flight buffers, bounding
+  chunk size from above (VMEM/HBM budget).
+
+``optimal_num_chunks`` minimizes the modeled step time; it reproduces the
+paper's qualitative finding (their ``primes`` cells were far below the
+break-even size) and quantifies it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def bubble_fraction(num_stages: int, num_chunks: int) -> float:
+    """Fill/drain bubble fraction of a linear pipeline (GPipe forward)."""
+    if num_stages <= 1:
+        return 0.0
+    return (num_stages - 1) / (num_chunks + num_stages - 1)
+
+
+def pipeline_step_time(
+    work_per_item: float,
+    num_stages: int,
+    num_chunks: int,
+    per_tick_overhead: float,
+) -> float:
+    """Modeled wall time of pipelining `work_per_item` split into chunks.
+
+    ``work_per_item`` is the total serial compute time of one full item
+    through all stages; each of the (M + S - 1) ticks costs the slowest
+    stage's chunk compute (work / (S*M)) plus a fixed overhead.
+    """
+    ticks = num_chunks + num_stages - 1
+    per_tick_compute = work_per_item / (num_stages * num_chunks)
+    return ticks * (per_tick_compute + per_tick_overhead)
+
+
+def optimal_num_chunks(
+    work_per_item: float,
+    num_stages: int,
+    per_tick_overhead: float,
+    max_chunks: int = 4096,
+) -> int:
+    """Minimize modeled step time over the number of chunks M.
+
+    Closed form of d/dM [ (M+S-1)(W/(S·M) + c) ] = 0:
+        M* = sqrt( W (S-1) / (S c) )
+    clipped to [1, max_chunks].  When overhead dominates (paper's primes
+    case) M* -> 1: don't pipeline fine-grained work.
+    """
+    if num_stages <= 1 or per_tick_overhead <= 0:
+        return max_chunks
+    m_star = math.sqrt(
+        work_per_item * (num_stages - 1) / (num_stages * per_tick_overhead)
+    )
+    return max(1, min(max_chunks, round(m_star)))
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkPolicy:
+    """Static chunking decision for a stream axis (items or sequence)."""
+
+    num_chunks: int
+    chunk_size: int
+
+    @staticmethod
+    def for_axis(axis_len: int, num_chunks: int) -> "ChunkPolicy":
+        if axis_len % num_chunks != 0:
+            raise ValueError(f"{axis_len=} not divisible by {num_chunks=}")
+        return ChunkPolicy(num_chunks, axis_len // num_chunks)
+
+
+def chunk_axis(tree, num_chunks: int, axis: int = 0):
+    """Reshape leading `axis` of every leaf into (num_chunks, chunk, ...)."""
+
+    def _chunk(x):
+        if x.shape[axis] % num_chunks != 0:
+            raise ValueError(
+                f"axis {axis} of shape {x.shape} not divisible by {num_chunks}"
+            )
+        new_shape = (
+            x.shape[:axis]
+            + (num_chunks, x.shape[axis] // num_chunks)
+            + x.shape[axis + 1 :]
+        )
+        x = x.reshape(new_shape)
+        if axis != 0:
+            x = jnp.moveaxis(x, axis, 0)
+        return x
+
+    return jax.tree.map(_chunk, tree)
+
+
+def unchunk_axis(tree, axis: int = 0):
+    """Inverse of :func:`chunk_axis`."""
+
+    def _unchunk(x):
+        if axis != 0:
+            x = jnp.moveaxis(x, 0, axis)
+        new_shape = x.shape[:axis] + (-1,) + x.shape[axis + 2 :]
+        return x.reshape(new_shape)
+
+    return jax.tree.map(_unchunk, tree)

@@ -1,0 +1,276 @@
+"""Stream re-interpreted with a substitutable evaluation monad.
+
+This is the JAX port of the paper's central construct:
+
+    class Cons(hd: A, tl: Future[Stream[A]]) extends Stream[A]
+
+A *bounded* stream program is a chain of dependent cells.  Each cell owns
+mutable per-cell state and transforms the item flowing through it::
+
+    cell_fn : (state_s, item) -> (state_s', item')
+
+Items (the paper's stream *elements*; in production, microbatches or
+sequence chunks) flow through the cells in order.  The semantics are fixed
+and evaluator-independent:
+
+    item b reaches cell s only after item b-1 has left cell s, and after
+    item b has left cell s-1.
+
+Two evaluators implement these semantics — the paper's Lazy/Future monad
+substitution:
+
+* :class:`LazyEvaluator` — ``lax.scan`` over items and cells on the local
+  device.  Sequential, memoized carry: the Lazy monad.
+* :class:`FutureEvaluator` — cells are sharded across a mesh axis and items
+  are software-pipelined through them with ``lax.ppermute``.  Each cell's
+  output is "a future" — an in-flight buffer the next stage forces by
+  consuming it one tick later.  The Future monad, TPU-style.
+
+Both produce bit-identical results (tested, including under hypothesis);
+only the schedule differs.  This mirrors the paper's claim that the
+algorithm text is unchanged when substituting Future for Lazy.
+
+Unbounded streams do not exist on XLA (shape-static); the paper itself
+bounds the stream in its Future version ("otherwise the computation will
+not stop since it is asynchronous").  We adopt the same concession:
+streams are bounded, with masked validity where needed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+PyTree = Any
+CellFn = Callable[[PyTree, PyTree], tuple[PyTree, PyTree]]
+
+
+# ---------------------------------------------------------------------------
+# Program
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamProgram:
+    """A bounded stream of ``num_cells`` dependent cells.
+
+    Attributes:
+      cell_fn: ``(state, item) -> (new_state, out_item)``.  Pure.  Applied
+        once per (cell, item) pair.  The cell index, if needed, should be
+        carried inside ``state`` (see :func:`indexed_states`).
+      init_state: per-cell state, every leaf stacked with leading axis
+        ``num_cells``.
+      num_cells: chain length (the paper's stream length).
+    """
+
+    cell_fn: CellFn
+    init_state: PyTree
+    num_cells: int
+    # False => cells never mutate their state (e.g. the state is layer
+    # parameters).  Evaluators then skip the masked state write-back, which
+    # would otherwise materialize a full copy of the state per tick.
+    mutable_state: bool = True
+    # Rematerialize cell_fn on the backward pass (GPipe-style activation
+    # checkpointing per (cell, item) pair).
+    remat: bool = False
+
+    def __post_init__(self):
+        leaves = jax.tree.leaves(self.init_state)
+        for leaf in leaves:
+            if hasattr(leaf, "shape") and leaf.shape[:1] != (self.num_cells,):
+                raise ValueError(
+                    f"init_state leaves must have leading axis num_cells="
+                    f"{self.num_cells}, got shape {leaf.shape}"
+                )
+
+
+def indexed_states(state: PyTree, num_cells: int) -> PyTree:
+    """Attach a cell-index leaf to per-cell state (helper)."""
+    return {"index": jnp.arange(num_cells), "state": state}
+
+
+# ---------------------------------------------------------------------------
+# Lazy evaluator — the Lazy monad (sequential, memoized)
+# ---------------------------------------------------------------------------
+
+
+class LazyEvaluator:
+    """Sequential evaluation: scan items (outer) through cells (inner).
+
+    Equivalent to the paper's ``Future(value: => A)`` with ``lazy val``
+    memoization — every tail is evaluated exactly once, on demand, on the
+    calling thread.
+    """
+
+    name = "lazy"
+
+    def __call__(self, program: StreamProgram, items: PyTree) -> tuple[PyTree, PyTree]:
+        """Run ``items`` (leading axis = stream of M items) through the chain.
+
+        Returns ``(final_states, out_items)`` with ``out_items`` leading
+        axis M (item b after all cells).
+        """
+
+        cell_fn = (
+            jax.checkpoint(program.cell_fn) if program.remat else program.cell_fn
+        )
+
+        def item_step(states, item):
+            def cell(flowing, state):
+                new_state, out = cell_fn(state, flowing)
+                if not program.mutable_state:
+                    new_state = state
+                return out, new_state
+
+            out, new_states = lax.scan(cell, item, states)
+            return new_states, out
+
+        return lax.scan(item_step, program.init_state, items)
+
+
+# ---------------------------------------------------------------------------
+# Future evaluator — cells pipelined across a mesh axis
+# ---------------------------------------------------------------------------
+
+
+def _tree_where(pred, a, b):
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+class FutureEvaluator:
+    """Pipelined evaluation across ``axis_name`` of ``mesh``.
+
+    ``num_cells`` must be divisible by the axis size D; each device owns a
+    contiguous group of ``num_cells // D`` cells (one *stage*).  Item b is
+    processed by stage s at tick ``t = b + s``; stage s's output at tick t
+    is ``ppermute``\\ d to stage s+1, which forces it (consumes the future)
+    at tick t+1.  Steady state keeps all D stages busy; fill/drain bubbles
+    cost ``(D-1)/(M+D-1)`` of the ticks — the paper's observation that
+    per-cell footprint (chunk size) must dominate the overhead, made exact.
+
+    The schedule is data-oblivious, so ``jax.grad`` through it yields the
+    reversed (backward) pipeline automatically — GPipe by autodiff.
+    """
+
+    name = "future"
+
+    def __init__(self, mesh: jax.sharding.Mesh, axis_name: str):
+        self.mesh = mesh
+        self.axis_name = axis_name
+        # Partial-manual shard_map: only the pipeline axis is manual; any
+        # other mesh axes (data/model) keep automatic GSPMD partitioning,
+        # so stages can themselves be FSDP×TP sharded (production mode).
+        self._partial = len(mesh.axis_names) > 1
+
+    def __call__(self, program: StreamProgram, items: PyTree) -> tuple[PyTree, PyTree]:
+        axis = self.axis_name
+        num_devices = self.mesh.shape[axis]
+        if program.num_cells % num_devices != 0:
+            raise ValueError(
+                f"num_cells={program.num_cells} not divisible by axis "
+                f"'{axis}' size {num_devices}"
+            )
+        num_items = jax.tree.leaves(items)[0].shape[0]
+
+        spec_state = jax.tree.map(
+            lambda _: jax.sharding.PartitionSpec(axis), program.init_state
+        )
+        spec_rep = jax.tree.map(lambda _: jax.sharding.PartitionSpec(), items)
+
+        shard_map_kwargs = dict(
+            mesh=self.mesh,
+            in_specs=(spec_state, spec_rep),
+            out_specs=(spec_state, spec_rep),
+        )
+        if self._partial:
+            shard_map_kwargs["axis_names"] = {axis}
+
+        @partial(jax.shard_map, **shard_map_kwargs)
+        def pipelined(local_states, items):
+            stage = lax.axis_index(axis)
+            # The loop carry varies per-device; mark it so (JAX>=0.8 vma).
+            def _varying(x):
+                return lax.pcast(x, (axis,), to="varying")
+
+            item0 = jax.tree.map(lambda x: _varying(jnp.zeros_like(x[0])), items)
+            outs0 = jax.tree.map(lambda x: _varying(jnp.zeros_like(x)), items)
+
+            cell_fn = (
+                jax.checkpoint(program.cell_fn)
+                if program.remat
+                else program.cell_fn
+            )
+
+            def stage_fn(states, flowing):
+                # One device-stage = Lazy scan over its local cells: the
+                # Future monad wraps whole chunks of the chain (the paper's
+                # §7 grouping, applied to cells as well as items).
+                def cell(fl, st):
+                    new_st, out = cell_fn(st, fl)
+                    if not program.mutable_state:
+                        new_st = st
+                    return out, new_st
+
+                out, new_states = lax.scan(cell, flowing, states)
+                return new_states, out
+
+            def tick(carry, t):
+                local_states, buf, outs = carry
+                # Stage 0 injects item t; later stages force the future
+                # their predecessor emitted at tick t-1.
+                injected = jax.tree.map(
+                    lambda x: x[jnp.clip(t, 0, num_items - 1)], items
+                )
+                inp = _tree_where(stage == 0, injected, buf)
+                valid = (t - stage >= 0) & (t - stage < num_items)
+                new_states, out = stage_fn(local_states, inp)
+                if program.mutable_state:
+                    local_states = _tree_where(valid, new_states, local_states)
+                # Last stage materializes the result for item t-stage.
+                write = valid & (stage == num_devices - 1)
+                idx = jnp.clip(t - stage, 0, num_items - 1)
+                outs = jax.tree.map(
+                    lambda o, v: jnp.where(
+                        write, o.at[idx].set(v), o
+                    ),
+                    outs,
+                    out,
+                )
+                # The future: out is now in flight to stage+1.
+                buf = jax.tree.map(
+                    lambda x: lax.ppermute(
+                        x, axis, [(i, i + 1) for i in range(num_devices - 1)]
+                    ),
+                    out,
+                )
+                return (local_states, buf, outs), None
+
+            ticks = jnp.arange(num_items + num_devices - 1)
+            (local_states, _, outs), _ = lax.scan(
+                tick, (local_states, item0, outs0), ticks
+            )
+            # Only the last stage holds valid outs; replicate via psum.
+            outs = jax.tree.map(
+                lambda o: lax.psum(
+                    jnp.where(stage == num_devices - 1, o, jnp.zeros_like(o)),
+                    axis,
+                ),
+                outs,
+            )
+            return local_states, outs
+
+        return pipelined(program.init_state, items)
+
+
+def evaluate(
+    program: StreamProgram,
+    items: PyTree,
+    evaluator: LazyEvaluator | FutureEvaluator | None = None,
+) -> tuple[PyTree, PyTree]:
+    """Monad-substitution entry point: same program, pluggable evaluator."""
+    evaluator = evaluator or LazyEvaluator()
+    return evaluator(program, items)

@@ -1,0 +1,154 @@
+"""Flash attention as a Pallas TPU kernel (forward).
+
+The online-softmax KV loop is the paper's bounded stream at the VMEM
+level: the innermost grid dimension walks KV blocks; Pallas's grid
+pipelining double-buffers the next block's HBM→VMEM DMA while the MXU
+works on the current one — the Cons(hd, tl: Future) of the memory system.
+
+Layout: q (B, H, Sq, dh), k/v (B, KV, Sk, dh) — GQA is handled in the
+BlockSpec index maps (kv head = q head // group), so grouped KV is never
+replicated in HBM.
+
+Grid: (B, H, Sq/blk_q, Sk/blk_k); scratch (m, l, acc) carries softmax
+state across the sequential innermost dimension.  Causal blocks entirely
+above the diagonal skip their compute via ``pl.when`` (the DMA still
+flows — on TPU the bandwidth is hidden by the pipeline; see §Perf for the
+triangular-grid variant that removes the wasted blocks altogether).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 256
+DEFAULT_BLOCK_K = 256
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref,  # blocks
+    o_ref,                # output block
+    m_ref, l_ref, acc_ref,  # scratch (persist across the kv grid dim)
+    *,
+    causal: bool,
+    softmax_scale: float,
+    block_q: int,
+    block_k: int,
+    num_kv_blocks: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Causal: skip blocks strictly above the diagonal.
+    q_start = qi * block_q
+    k_start = ki * block_k
+    needed = (not causal) or (k_start <= q_start + block_q - 1)
+
+    @pl.when(needed if isinstance(needed, bool) else needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * softmax_scale  # (bq, dh)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, dh)
+        v = v_ref[0, 0].astype(jnp.float32)  # (bk, dh)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (bq, bk)
+        if causal:
+            q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        l = l_ref[...]
+        # Fully-masked rows (causal prefix) have l == 0: emit zeros.
+        o_ref[0, 0, :, :] = (
+            acc_ref[...] / jnp.maximum(l, 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "softmax_scale", "block_q", "block_k", "interpret"
+    ),
+)
+def flash_attention_bhsd(
+    q: jnp.ndarray,  # (B, H, Sq, dh)
+    k: jnp.ndarray,  # (B, KV, Sk, dh)
+    v: jnp.ndarray,  # (B, KV, Sk, dh)
+    *,
+    causal: bool = True,
+    softmax_scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, h, sq, dh = q.shape
+    kv, sk = k.shape[1], k.shape[2]
+    assert h % kv == 0
+    group = h // kv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, block_q, sk, block_k)
+    nq, nk = sq // block_q, sk // block_k
+    scale = softmax_scale if softmax_scale is not None else dh**-0.5
+
+    grid = (b, h, nq, nk)
+    kernel = functools.partial(
+        _flash_kernel,
+        causal=causal,
+        softmax_scale=scale,
+        block_q=block_q,
+        block_k=block_k,
+        num_kv_blocks=nk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, block_q, dh), lambda bb, hh, qi, ki: (bb, hh, qi, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, dh),
+                lambda bb, hh, qi, ki, g=group: (bb, hh // g, ki, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, dh),
+                lambda bb, hh, qi, ki, g=group: (bb, hh // g, ki, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, dh), lambda bb, hh, qi, ki: (bb, hh, qi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),  # m
+            pltpu.VMEM((block_q, 1), jnp.float32),  # l
+            pltpu.VMEM((block_q, dh), jnp.float32),  # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,43 @@
+"""Jit'd public wrapper for the flash-attention kernel.
+
+Handles layout adaptation (model code uses (B, S, H, dh); the kernel uses
+(B, H, S, dh)), GQA head mapping, block-size selection, and the
+interpret-mode fallback on CPU (the kernel body executes via the Pallas
+interpreter — bit-accurate logic, no Mosaic).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(
+    q: jnp.ndarray,  # (B, Sq, H, dh)
+    k: jnp.ndarray,  # (B, Sk, KV, dh)
+    v: jnp.ndarray,  # (B, Sk, KV, dh)
+    *,
+    causal: bool = True,
+    softmax_scale: float | None = None,
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: bool | None = None,
+    **_ignored,
+) -> jnp.ndarray:
+    """Drop-in for repro.models.layers.attention(impl=...)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    qt = jnp.swapaxes(q, 1, 2)  # (B, H, Sq, dh)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_attention_bhsd(
+        qt, kt, vt,
+        causal=causal, softmax_scale=softmax_scale,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash-attention kernel (fp32 math, GQA)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (B, H, Sq, dh)
+    k: jnp.ndarray,  # (B, KV, Sk, dh)
+    v: jnp.ndarray,  # (B, KV, Sk, dh)
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    softmax_scale: float | None = None,
+) -> jnp.ndarray:
+    b, h, sq, dh = q.shape
+    kv, sk = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = softmax_scale if softmax_scale is not None else dh**-0.5
+    qf = q.reshape(b, kv, g, sq, dh).astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bkgqd,bksd->bkgqs", qf, kf)
+    if causal:
+        q_pos = jnp.arange(sq) + q_offset
+        kv_pos = jnp.arange(sk)
+        mask = kv_pos[None, :] <= q_pos[:, None]
+        scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", probs, vf)
+    return out.reshape(b, h, sq, dh).astype(q.dtype)

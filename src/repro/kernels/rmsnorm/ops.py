@@ -1,0 +1,28 @@
+"""Jit'd wrapper: leading-dim flattening + interpret fallback on CPU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, *, eps: float = 1e-5,
+            interpret: bool | None = None) -> jnp.ndarray:
+    """Drop-in for repro.models.layers.rmsnorm(params, x)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    lead = x.shape[:-1]
+    rows = 1
+    for s in lead:
+        rows *= s
+    d = x.shape[-1]
+    # pick the largest block that divides rows (pow2 walk-down)
+    block = 256
+    while block > 1 and rows % block != 0:
+        block //= 2
+    out = rmsnorm_pallas(
+        x.reshape(rows, d), scale, eps=eps, block_rows=block,
+        interpret=interpret,
+    )
+    return out.reshape(*lead, d)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the fused RMSNorm kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def rmsnorm_ref(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """x: (..., d); scale: (d,) fp32.  fp32 math, output in x.dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * lax.rsqrt(var + eps) * scale).astype(x.dtype)

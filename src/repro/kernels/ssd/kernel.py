@@ -1,0 +1,130 @@
+"""Mamba-2 SSD intra-chunk Pallas kernel.
+
+One grid instance = (one sequence chunk) × (one head): the per-cell
+footprint of the SSD stream.  The cross-chunk state recurrence — the
+paper's dependent chain — stays outside (see ops.py), carried either by a
+sequential scan (Lazy) or an associative scan (beyond-paper).
+
+Per instance, with Q = chunk, N = state, P = head dim:
+
+    cum   = L_tri @ (dt * a)          (cumulative decay, via MXU matmul —
+                                       cumsum has no native TPU lowering)
+    decay = exp(cum_i - cum_j) ⊙ tril
+    cb    = C @ B^T                   (Q,N)x(N,Q)
+    y     = (cb ⊙ decay ⊙ dt_j) @ x   (Q,Q)x(Q,P)
+    state = (B ⊙ exp(total-cum) dt)^T @ x   (N,Q)x(Q,P)
+    cumout= exp(cum) (for the inter-chunk C·S_prev term outside)
+
+VMEM per instance ≈ Q² + Q(N+2P) floats — 380 KiB at Q=256,N=128,P=64.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(
+    x_ref, dt_ref, b_ref, c_ref, a_ref, dskip_ref,
+    y_ref, state_ref, cum_ref,
+    *,
+    chunk: int,
+):
+    x = x_ref[0, 0].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)      # (Q, 1) -> (Q,)
+    b = b_ref[0, 0].astype(jnp.float32)        # (Q, N)
+    c = c_ref[0, 0].astype(jnp.float32)        # (Q, N)
+    a = a_ref[0, 0]                            # scalar
+    d_skip = dskip_ref[0, 0]                   # scalar
+
+    dtc = dt[:, 0]                             # (Q,)
+    da = dtc * a                               # (Q,)
+    # cumulative (inclusive) decay via lower-triangular matmul
+    tri = (
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    )
+    cum = jax.lax.dot_general(
+        tri.astype(jnp.float32), da[:, None],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[:, 0]                                     # (Q,)
+    total = cum[-1]
+
+    decay = jnp.exp(cum[:, None] - cum[None, :])
+    decay = jnp.where(tri, decay, 0.0)
+    cb = jax.lax.dot_general(
+        c, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                           # (Q, Q)
+    w = cb * decay * dtc[None, :]
+    y = jax.lax.dot_general(
+        w, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                           # (Q, P)
+    y = y + x * d_skip
+
+    state_w = jnp.exp(total - cum) * dtc        # (Q,)
+    state = jax.lax.dot_general(
+        b * state_w[:, None], x,
+        (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )                                           # (N, P)
+
+    y_ref[0, 0, :, :] = y.astype(y_ref.dtype)
+    state_ref[0, 0, :, :] = state
+    cum_ref[0, 0, :, 0] = cum
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "interpret")
+)
+def ssd_intra_chunk(
+    x: jnp.ndarray,   # (BC, H, Q, P)  BC = batch*num_chunks
+    dt: jnp.ndarray,  # (BC, H, Q)
+    b: jnp.ndarray,   # (BC, G, Q, N)
+    c: jnp.ndarray,   # (BC, G, Q, N)
+    a: jnp.ndarray,   # (H,) negative decay rates (f32)
+    d_skip: jnp.ndarray,  # (H,) (f32)
+    *,
+    chunk: int,
+    interpret: bool = False,
+):
+    """Returns (y (BC,H,Q,P), state (BC,H,N,P) f32, cum (BC,H,Q) f32)."""
+    bc, h, q, p = x.shape
+    g, n = b.shape[1], b.shape[3]
+    hg = h // g
+    assert q == chunk
+
+    grid = (bc, h)
+    kernel = functools.partial(_ssd_chunk_kernel, chunk=chunk)
+    y, state, cum = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q, p), lambda i, hh: (i, hh, 0, 0)),
+            pl.BlockSpec((1, 1, q, 1), lambda i, hh: (i, hh, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda i, hh, _hg=hg: (i, hh // _hg, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda i, hh, _hg=hg: (i, hh // _hg, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i, hh: (hh, 0)),
+            pl.BlockSpec((1, 1), lambda i, hh: (hh, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q, p), lambda i, hh: (i, hh, 0, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda i, hh: (i, hh, 0, 0)),
+            pl.BlockSpec((1, 1, q, 1), lambda i, hh: (i, hh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bc, h, q, p), x.dtype),
+            jax.ShapeDtypeStruct((bc, h, n, p), jnp.float32),
+            jax.ShapeDtypeStruct((bc, h, q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        x,
+        dt[..., None],
+        b,
+        c,
+        a[:, None].astype(jnp.float32),
+        d_skip[:, None].astype(jnp.float32),
+    )
+    return y, state, cum[..., 0]

@@ -1,0 +1,102 @@
+"""SSD = Pallas intra-chunk kernel + the cross-chunk stream recurrence.
+
+``ssd_chunked_pallas`` mirrors :func:`repro.models.ssm.ssd_chunked` but
+computes the per-chunk (intra) work in the kernel; the carried (H,N,P)
+state — the paper's future-tail — is combined outside, either with a
+sequential ``lax.scan`` (Lazy; default) or an associative scan
+(``recurrence="associative"`` — the beyond-paper parallelization: the
+decay/state pairs form a semigroup (d2, s2)∘(d1, s1) = (d1·d2, d2·s1+s2)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _combine(left, right):
+    d1, s1 = left
+    d2, s2 = right
+    return d1 * d2, d2[..., None, None] * s1 + s2
+
+
+def ssd_chunked_pallas(
+    x, dt, a, b_mat, c_mat, d_skip,
+    *,
+    chunk: int,
+    initial_state=None,
+    recurrence: str = "scan",
+    interpret: bool | None = None,
+):
+    """Same contract as repro.models.ssm.ssd_chunked (y, final_state)."""
+    from repro.kernels.ssd.kernel import ssd_intra_chunk
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    assert s % chunk == 0
+    nc = s // chunk
+
+    # (B, S, ...) -> (B*nc, head-major, Q, ...)
+    xk = x.reshape(bsz, nc, chunk, h, p).transpose(0, 1, 3, 2, 4).reshape(
+        bsz * nc, h, chunk, p
+    )
+    dtk = dt.reshape(bsz, nc, chunk, h).transpose(0, 1, 3, 2).reshape(
+        bsz * nc, h, chunk
+    )
+    bk = b_mat.reshape(bsz, nc, chunk, g, n).transpose(0, 1, 3, 2, 4).reshape(
+        bsz * nc, g, chunk, n
+    )
+    ck = c_mat.reshape(bsz, nc, chunk, g, n).transpose(0, 1, 3, 2, 4).reshape(
+        bsz * nc, g, chunk, n
+    )
+
+    y_intra, states, cum = ssd_intra_chunk(
+        xk, dtk, bk, ck,
+        a.astype(jnp.float32), d_skip.astype(jnp.float32),
+        chunk=chunk, interpret=interpret,
+    )
+    y_intra = y_intra.reshape(bsz, nc, h, chunk, p)
+    states = states.reshape(bsz, nc, h, n, p)
+    cum = cum.reshape(bsz, nc, h, chunk)
+    chunk_decay = jnp.exp(cum[:, :, :, -1])  # (B, nc, H)
+
+    s0 = (
+        jnp.zeros((bsz, h, n, p), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    if recurrence == "associative":
+        # prefix-combine all (decay, state) pairs, then shift right by one
+        decays = jnp.moveaxis(chunk_decay, 1, 0)  # (nc, B, H)
+        sts = jnp.moveaxis(states, 1, 0)  # (nc, B, H, N, P)
+        # fold the initial state into the first element
+        sts = sts.at[0].add(s0 * decays[0][..., None, None])
+        pd, ps = lax.associative_scan(_combine, (decays, sts), axis=0)
+        final = ps[-1]
+        prev = jnp.concatenate([s0[None], ps[:-1]], axis=0)  # state entering chunk
+        prev_states = jnp.moveaxis(prev, 0, 1)  # (B, nc, H, N, P)
+    else:
+        def step(carry, inp):
+            dec, st = inp
+            new = carry * dec[..., None, None] + st
+            return new, carry
+
+        final, prev = lax.scan(
+            step, s0,
+            (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)),
+        )
+        prev_states = jnp.moveaxis(prev, 0, 1)
+
+    # inter-chunk output: C_i · S_prev · exp(cum_i), shaped (B,nc,H,Q,P)
+    hg = h // g
+    ch = jnp.repeat(c_mat.reshape(bsz, nc, chunk, g, n), hg, axis=3)
+    y_inter = jnp.einsum(
+        "bzqhn,bzhnp,bzhq->bzhqp",
+        ch.astype(jnp.float32), prev_states, jnp.exp(cum),
+    )
+    y = y_intra.astype(jnp.float32) + y_inter
+    y = y.transpose(0, 1, 3, 2, 4).reshape(bsz, s, h, p).astype(x.dtype)
+    return y, final

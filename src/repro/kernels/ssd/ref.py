@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the Mamba-2 SSD chunk kernel.
+
+Naive (non-chunked) recurrence — the ground truth the chunked kernel and
+the model's scan implementation must both reproduce:
+
+    s_t = exp(dt_t * a) * s_{t-1} + dt_t * B_t x_t^T
+    y_t = C_t . s_t + D * x_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssd_ref(x, dt, a, b_mat, c_mat, d_skip, *, initial_state=None):
+    """x: (B,S,H,P); dt: (B,S,H); a: (H,); b/c: (B,S,G,N); d_skip: (H,).
+
+    Returns (y (B,S,H,P) f32, final_state (B,H,N,P) f32).
+    """
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    hg = h // g
+    f32 = jnp.float32
+    xf = x.astype(f32)
+    dtf = dt.astype(f32)
+    bh = jnp.repeat(b_mat, hg, axis=2).astype(f32)  # (B,S,H,N)
+    ch = jnp.repeat(c_mat, hg, axis=2).astype(f32)
+
+    s0 = (
+        jnp.zeros((bsz, h, n, p), f32)
+        if initial_state is None
+        else initial_state.astype(f32)
+    )
+
+    def step(state, t):
+        decay = jnp.exp(dtf[:, t] * a)  # (B,H)
+        state = state * decay[:, :, None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhnp", dtf[:, t], bh[:, t], xf[:, t]
+        )
+        y = jnp.einsum("bhn,bhnp->bhp", ch[:, t], state)
+        y = y + xf[:, t] * d_skip[None, :, None]
+        return state, y
+
+    final, ys = lax.scan(step, s0, jnp.arange(s))
+    return jnp.moveaxis(ys, 0, 1), final

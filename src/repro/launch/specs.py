@@ -1,0 +1,130 @@
+"""ShapeDtypeStruct input specs per (arch × shape) cell.
+
+Everything the dry-run lowers is declared here: abstract params, optimizer
+state, batches, caches — with logical axes resolved to NamedShardings via
+the rule sets in :mod:`repro.parallel.sharding`.  No device allocation.
+
+Modality frontends are stubs per the assignment: the VLM's
+``vision_embeds`` and the audio model's frame ``embeds`` arrive as
+precomputed embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeCell
+from repro.models import transformer as T
+from repro.models.params import abstract_params
+from repro.parallel import sharding as SH
+from repro.train import optimizer as O
+
+PyTree = Any
+
+
+def batch_struct(cfg: ArchConfig, shape: ShapeCell) -> tuple[PyTree, PyTree]:
+    """(ShapeDtypeStructs, logical-axes tree) for one training batch."""
+    b, s = shape.global_batch, shape.seq_len
+    structs: dict[str, Any] = {}
+    axes: dict[str, Any] = {}
+    if cfg.embeds_input:
+        structs["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+        axes["embeds"] = ("batch", "seq", None)
+    else:
+        structs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        axes["tokens"] = ("batch", "seq")
+    structs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    axes["labels"] = ("batch", "seq")
+    if cfg.vision_tokens:
+        structs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.vision_tokens, cfg.d_model), jnp.bfloat16
+        )
+        axes["vision_embeds"] = ("batch", None, None)
+    return structs, axes
+
+
+def sharded(structs: PyTree, axes: PyTree, rules, mesh) -> PyTree:
+    """Attach NamedShardings to ShapeDtypeStructs by logical axes."""
+
+    def one(struct, ax):
+        spec = SH.fit_spec(SH.spec_for(ax, rules), struct.shape, mesh)
+        return jax.ShapeDtypeStruct(
+            struct.shape, struct.dtype, sharding=NamedSharding(mesh, spec)
+        )
+
+    return jax.tree.map(one, structs, axes, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def abstract_model_state(cfg: ArchConfig, ocfg: O.AdamWConfig, rules, mesh):
+    """(abstract params, abstract opt state) with shardings attached."""
+    layout = T.model_layout(cfg)
+    a_params = abstract_params(layout)
+    shardings = SH.param_shardings(layout, rules, mesh)
+    a_params = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        a_params,
+        shardings,
+    )
+    a_opt = O.abstract_opt_state(a_params, ocfg)
+    # moments share the param shardings; step is replicated
+    a_opt = {
+        "m": jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            a_opt["m"], shardings,
+        ),
+        "v": jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            a_opt["v"], shardings,
+        ),
+        "step": jax.ShapeDtypeStruct(
+            (), jnp.int32, sharding=NamedSharding(mesh, P())
+        ),
+    }
+    return a_params, a_opt
+
+
+def abstract_cache(cfg: ArchConfig, shape: ShapeCell, rules, mesh):
+    caches = T.cache_layout(cfg, shape.global_batch, shape.seq_len)
+    axes = T.cache_logical_axes(cfg)
+    return sharded(caches, axes, rules, mesh)
+
+
+def decode_inputs(cfg: ArchConfig, shape: ShapeCell, rules, mesh):
+    b = shape.global_batch
+    batch_spec = SH.prune_spec(SH.spec_for(("batch",), rules), mesh)
+    structs = {
+        "lengths": jax.ShapeDtypeStruct(
+            (b,), jnp.int32, sharding=NamedSharding(mesh, batch_spec)
+        ),
+    }
+    if cfg.embeds_input:
+        structs["embeds"] = jax.ShapeDtypeStruct(
+            (b, 1, cfg.d_model), jnp.bfloat16,
+            sharding=NamedSharding(mesh, SH.prune_spec(SH.spec_for(("batch", None, None), rules), mesh)),
+        )
+    else:
+        structs["tokens"] = jax.ShapeDtypeStruct(
+            (b,), jnp.int32, sharding=NamedSharding(mesh, batch_spec)
+        )
+    return structs
+
+
+def prefill_inputs(cfg: ArchConfig, shape: ShapeCell, rules, mesh):
+    b, s = shape.global_batch, shape.seq_len
+    structs: dict[str, Any] = {}
+    axes: dict[str, Any] = {}
+    if cfg.embeds_input:
+        structs["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+        axes["embeds"] = ("batch", "seq", None)
+    else:
+        structs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        axes["tokens"] = ("batch", "seq")
+    if cfg.vision_tokens:
+        structs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.vision_tokens, cfg.d_model), jnp.bfloat16
+        )
+        axes["vision_embeds"] = ("batch", None, None)
+    return sharded(structs, axes, rules, mesh)

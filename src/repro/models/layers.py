@@ -1,0 +1,454 @@
+"""Shared transformer layers: norms, RoPE, GQA attention, gated MLP.
+
+All functions are pure; parameters are declared as ParamSpec layouts by
+the companion ``*_layout`` functions, so models compose layouts and apply
+functions in parallel trees.
+
+Attention comes in three interchangeable implementations (config
+``attn_impl``):
+
+* ``dense`` — full score matrix; smoke tests and short sequences.
+* ``chunked`` — pure-jnp streaming attention (online softmax over KV
+  chunks), the ref oracle for the Pallas kernel and the lowering used by
+  the CPU dry-run; memory O(chunk²) instead of O(S²).  The KV chunk axis
+  is a bounded stream with carried (m, l, o) state — the paper's construct
+  applied to the sequence dimension.
+* ``pallas`` — :mod:`repro.kernels.flash_attention` (TPU target).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models.params import ParamSpec
+
+PyTree = Any
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (GSPMD guard rails)
+#
+# Without these, sharding propagation inside a layer is free to replicate
+# the batch or split hidden dims arbitrarily (observed: attention internals
+# batch-replicated at 256 chips).  Constraints pin the canonical layout:
+# batch over (pod, data), heads/ffn over model, residual d unsharded.
+# ---------------------------------------------------------------------------
+
+_BATCH = ("pod", "data")
+
+
+def constrain(x, *axes):
+    """maybe_constrain with ('pod','data') batch plus given tail axes."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel.sharding import maybe_constrain
+
+    return maybe_constrain(x, P(_BATCH, *axes))
+
+
+def constrain_res(x):  # (B, S, d)
+    return constrain(x, None, None)
+
+
+def constrain_heads(x):  # (B, S, H|KV, dh)
+    return constrain(x, None, "model", None)
+
+
+def constrain_ffn(x):  # (B, S, f)
+    return constrain(x, None, "model")
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_layout(dim: int, stacked: tuple[int, ...] = ()):
+    axes = ("layers",) * len(stacked) + ("embed",)
+    return {"scale": ParamSpec(stacked + (dim,), axes, init="ones", dtype=jnp.float32)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * lax.rsqrt(var + eps)
+    return (x * params["scale"]).astype(dtype)
+
+
+def layernorm_nonparam(x, eps: float = 1e-5):
+    """OLMo's non-parametric LayerNorm (no scale/bias)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return ((x - mu) * lax.rsqrt(var + eps)).astype(dtype)
+
+
+def make_norm(norm: str, dim: int, stacked: tuple[int, ...] = ()):
+    """Returns (layout, apply(params, x))."""
+    if norm == "rmsnorm":
+        return rmsnorm_layout(dim, stacked), rmsnorm
+    if norm == "layernorm_nonparam":
+        return {}, lambda params, x, eps=1e-5: layernorm_nonparam(x, eps)
+    raise ValueError(norm)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, dh); positions: (..., S) int32."""
+    freqs = rope_frequencies(x.shape[-1], theta)  # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention core — dense and chunked (streaming) implementations
+# ---------------------------------------------------------------------------
+
+
+def _gqa_scores_shape(q, k):
+    """q: (B,Sq,H,dh) k: (B,Sk,KV,dh) -> q grouped (B,Sq,KV,G,dh)."""
+    b, sq, h, dh = q.shape
+    kv = k.shape[2]
+    assert h % kv == 0, (h, kv)
+    return q.reshape(b, sq, kv, h // kv, dh)
+
+
+def attention_dense(
+    q, k, v, *, causal: bool, q_offset=0, kv_len=None, softmax_scale=None
+):
+    """Full-score attention.  q:(B,Sq,H,dh) k,v:(B,Sk,KV,dh) -> (B,Sq,H,dh).
+
+    ``q_offset``: absolute position of q[0] (decode: Sq=1, offset=pos).
+    ``kv_len``: number of valid KV positions (rest masked; cache padding).
+    """
+    b, sq, h, dh = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    scale = softmax_scale or dh**-0.5
+    qg = _gqa_scores_shape(q, k)  # (B,Sq,KV,G,dh)
+    scores = jnp.einsum(
+        "bqkgd,bskd->bqkgs", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    kv_pos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        q_pos = jnp.arange(sq) + q_offset
+        mask &= kv_pos[None, :] <= q_pos[:, None]
+    scores = jnp.where(mask[None, :, None, None, :], scores, -jnp.inf)
+    if kv_len is not None:
+        # kv_len: scalar or (B,)/(B,1) per-sequence valid length.
+        klen = jnp.asarray(kv_len).reshape(-1, 1)  # (B,1) or (1,1)
+        kmask = kv_pos[None, :] < klen  # (B,S)
+        scores = jnp.where(kmask[:, None, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # Rows that are fully masked produce NaN; scrub (decode prefix).
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)
+    out = jnp.einsum("bqkgs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def attention_chunked(
+    q,
+    k,
+    v,
+    *,
+    causal: bool,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    q_offset=0,
+    kv_len=None,
+    softmax_scale=None,
+    causal_skip=None,
+):
+    """Streaming (online-softmax) attention; the flash-attention oracle.
+
+    Scans KV chunks as a bounded stream with carried (m, l, acc) — memory
+    O(q_chunk × kv_chunk) — and vmaps over q chunks.
+    """
+    b, sq, h, dh = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    scale = softmax_scale or dh**-0.5
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    # Pad ragged sequence lengths (e.g. 1601 vision tokens) to chunk
+    # multiples; padded KV is masked via kv_len, padded Q sliced off.
+    sq_pad = -(-sq // q_chunk) * q_chunk
+    sk_pad = -(-sk // kv_chunk) * kv_chunk
+    if sk_pad != sk:
+        k = jnp.pad(k, ((0, 0), (0, sk_pad - sk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sk_pad - sk), (0, 0), (0, 0)))
+        kv_len = jnp.minimum(jnp.asarray(kv_len if kv_len is not None else sk), sk)
+    if sq_pad != sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_pad - sq), (0, 0), (0, 0)))
+    orig_sq, sq, sk = sq, sq_pad, sk_pad
+    nq, nk = sq // q_chunk, sk // kv_chunk
+    g = h // kv
+
+    # Blocks stay in the input dtype (bf16 on TPU) — scores/stats in fp32.
+    # fp32 copies of Q/K/V were the dominant HBM traffic (§Perf iter. 3).
+    # Batch sharding is re-pinned on the chunked views: GSPMD loses it
+    # through the pair-scan's dynamic chunk indexing when the head dims
+    # are replicated (archs with heads % model != 0), replicating and
+    # re-gathering the whole batch instead (§Perf iteration 4).
+    qg = constrain(q.reshape(b, nq, q_chunk, kv, g, dh), None, None, None, None, None)
+    kc = constrain(k.reshape(b, nk, kv_chunk, kv, dh), None, None, None, None)
+    vc = constrain(v.reshape(b, nk, kv_chunk, kv, dh), None, None, None, None)
+
+    def block_update(carry, q_blk, k_blk, v_blk, qi, kj):
+        m, l, acc = carry
+        s = jnp.einsum(
+            "bqkgd,bskd->bqkgs", q_blk, k_blk,
+            preferred_element_type=jnp.float32,
+        ) * scale
+        kv_pos = kj * kv_chunk + jnp.arange(kv_chunk)
+        mask = jnp.ones((q_chunk, kv_chunk), bool)
+        if causal:
+            q_pos = qi * q_chunk + jnp.arange(q_chunk) + q_offset
+            mask &= kv_pos[None, :] <= q_pos[:, None]
+        mask = jnp.broadcast_to(mask[None], (b, q_chunk, kv_chunk))
+        if kv_len is not None:
+            klen = jnp.asarray(kv_len).reshape(-1, 1)  # (B,1) or (1,1)
+            mask &= (kv_pos[None, :] < klen)[:, None, :]
+        mask = mask[:, :, None, None, :]
+        s = jnp.where(mask, s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard -inf rows (no valid key yet)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bqkgs,bskd->bqkgd", p.astype(q_blk.dtype), v_blk,
+            preferred_element_type=jnp.float32,
+        )
+        return m_new, l, acc
+
+    static_offset = isinstance(q_offset, (int, np.integer)) and q_offset == 0
+    auto_skip = causal and static_offset and sq == sk and kv_len is None
+    # None = auto.  The skip halves attention FLOPs but its pair-scan
+    # backward carries more HBM traffic on some shapes; memory-bound
+    # cells may prefer it off (§Perf iteration 6).
+    causal_skip = auto_skip if causal_skip is None else (causal_skip and auto_skip)
+    # vma seed: carries must inherit the varying-manual-axes type when this
+    # runs inside a partial-manual shard_map (the pod-axis pipeline);
+    # adding a zero derived from q is a no-op elsewhere.
+    vma0 = (qg.astype(jnp.float32) * 0).sum()
+
+    if causal_skip:
+        # Triangular pair-list scan: blocks strictly above the diagonal
+        # are never touched — halves attention compute AND traffic
+        # (§Perf iteration 3b).  Carry holds per-q-chunk (m, l, acc).
+        pairs = np.asarray(
+            [(qi, kj) for qi in range(nq) for kj in range(qi + 1)], np.int32
+        )
+
+        def pair_step(carry, pair):
+            qi, kj = pair[0], pair[1]
+            m, l, acc = carry
+            q_blk = lax.dynamic_index_in_dim(qg, qi, 1, keepdims=False)
+            k_blk = lax.dynamic_index_in_dim(kc, kj, 1, keepdims=False)
+            v_blk = lax.dynamic_index_in_dim(vc, kj, 1, keepdims=False)
+            sub = (
+                lax.dynamic_index_in_dim(m, qi, 0, keepdims=False),
+                lax.dynamic_index_in_dim(l, qi, 0, keepdims=False),
+                lax.dynamic_index_in_dim(acc, qi, 0, keepdims=False),
+            )
+            m_n, l_n, acc_n = block_update(sub, q_blk, k_blk, v_blk, qi, kj)
+            m = lax.dynamic_update_index_in_dim(m, m_n, qi, 0)
+            l = lax.dynamic_update_index_in_dim(l, l_n, qi, 0)
+            acc = lax.dynamic_update_index_in_dim(acc, acc_n, qi, 0)
+            return (m, l, acc), None
+
+        m0 = jnp.full((nq, b, q_chunk, kv, g), -jnp.inf) + vma0
+        l0 = jnp.zeros((nq, b, q_chunk, kv, g)) + vma0
+        acc0 = jnp.zeros((nq, b, q_chunk, kv, g, dh)) + vma0
+        (m, l, acc), _ = lax.scan(
+            jax.checkpoint(pair_step), (m0, l0, acc0), jnp.asarray(pairs)
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)  # (nq,B,qc,KV,G,dh)
+        out = jnp.moveaxis(out, 0, 1)
+    else:
+        def one_q_chunk(qi, q_blk):
+            def kv_step(carry, inputs):
+                kj, k_blk, v_blk = inputs
+                return block_update(carry, q_blk, k_blk, v_blk, qi, kj), None
+
+            m0 = jnp.full((b, q_chunk, kv, g), -jnp.inf) + vma0
+            l0 = jnp.zeros((b, q_chunk, kv, g)) + vma0
+            acc0 = jnp.zeros((b, q_chunk, kv, g, dh)) + vma0
+            # checkpoint per KV block: backward recomputes s/p instead of
+            # saving every block's probability matrix (flash rule)
+            (m, l, acc), _ = lax.scan(
+                jax.checkpoint(kv_step),
+                (m0, l0, acc0),
+                (jnp.arange(nk), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)),
+            )
+            return acc / jnp.maximum(l[..., None], 1e-30)
+
+        out = jax.vmap(one_q_chunk, in_axes=(0, 1), out_axes=1)(
+            jnp.arange(nq), qg
+        )  # (B, nq, q_chunk, KV, G, dh)
+    return out.reshape(b, sq, h, dh)[:, :orig_sq].astype(q.dtype)
+
+
+def attention(q, k, v, *, impl: str = "dense", **kw):
+    if impl == "dense":
+        for extra in ("q_chunk", "kv_chunk", "causal_skip"):
+            kw.pop(extra, None)
+        return attention_dense(q, k, v, **kw)
+    if impl == "chunked":
+        return attention_chunked(q, k, v, **kw)
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        return fa_ops.flash_attention(q, k, v, **kw)
+    raise ValueError(impl)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections + rope + qk-norm)
+# ---------------------------------------------------------------------------
+
+
+def attn_layout(cfg, stacked: tuple[int, ...] = (), cross: bool = False):
+    d, h, kv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ax = ("layers",) * len(stacked)
+    out = {
+        "wq": ParamSpec(stacked + (d, h, dh), ax + ("embed", "heads", "head_dim"), dtype=cfg.dtype),
+        "wk": ParamSpec(stacked + (d, kv, dh), ax + ("embed", "kv_heads", "head_dim"), dtype=cfg.dtype),
+        "wv": ParamSpec(stacked + (d, kv, dh), ax + ("embed", "kv_heads", "head_dim"), dtype=cfg.dtype),
+        "wo": ParamSpec(stacked + (h, dh, d), ax + ("heads", "head_dim", "embed"), dtype=cfg.dtype),
+    }
+    if cfg.qkv_bias and not cross:
+        out["bq"] = ParamSpec(stacked + (h, dh), ax + ("heads", "head_dim"), init="zeros", dtype=cfg.dtype)
+        out["bk"] = ParamSpec(stacked + (kv, dh), ax + ("kv_heads", "head_dim"), init="zeros", dtype=cfg.dtype)
+        out["bv"] = ParamSpec(stacked + (kv, dh), ax + ("kv_heads", "head_dim"), init="zeros", dtype=cfg.dtype)
+    if cfg.qk_norm:
+        out["q_norm"] = ParamSpec(stacked + (dh,), ax + ("head_dim",), init="ones", dtype=jnp.float32)
+        out["k_norm"] = ParamSpec(stacked + (dh,), ax + ("head_dim",), init="ones", dtype=jnp.float32)
+    return out
+
+
+def _maybe_qk_norm(params, q, k, eps):
+    if "q_norm" in params:
+        q = rmsnorm({"scale": params["q_norm"]}, q, eps)
+        k = rmsnorm({"scale": params["k_norm"]}, k, eps)
+    return q, k
+
+
+def attn_project_qkv(params, x, cfg, positions):
+    """x: (B,S,d) -> q,k,v with rope + optional bias/qk-norm."""
+    q = constrain_heads(jnp.einsum("bsd,dhk->bshk", x, params["wq"]))
+    k = constrain_heads(jnp.einsum("bsd,dhk->bshk", x, params["wk"]))
+    v = constrain_heads(jnp.einsum("bsd,dhk->bshk", x, params["wv"]))
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q, k = _maybe_qk_norm(params, q, k, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_out(params, ctx):
+    return constrain_res(
+        jnp.einsum("bshk,hkd->bsd", constrain_heads(ctx), params["wo"])
+    )
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_layout(cfg, d_ff: int | None = None, stacked: tuple[int, ...] = ()):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ax = ("layers",) * len(stacked)
+    return {
+        "w_gate": ParamSpec(stacked + (d, f), ax + ("embed", "ffn"), dtype=cfg.dtype),
+        "w_up": ParamSpec(stacked + (d, f), ax + ("embed", "ffn"), dtype=cfg.dtype),
+        "w_down": ParamSpec(stacked + (f, d), ax + ("ffn", "embed"), dtype=cfg.dtype),
+    }
+
+
+def mlp(params, x):
+    gate = constrain_ffn(jnp.einsum("bsd,df->bsf", x, params["w_gate"]))
+    up = constrain_ffn(jnp.einsum("bsd,df->bsf", x, params["w_up"]))
+    act = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    return constrain_res(jnp.einsum("bsf,fd->bsd", act, params["w_down"]))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def embed_layout(cfg):
+    # Untied: ("vocab_table", "embed_table") -> (None, "model") — input
+    # gather stays local per shard (a vocab-sharded gather forces SPMD to
+    # replicate the table).
+    # Tied: the table doubles as the LM head, which must produce
+    # vocab-sharded logits -> shard over vocab and accept one table
+    # all-gather at the input gather (cheap: tied archs have small
+    # vocab×d).  See EXPERIMENTS.md §Perf for the measured trade.
+    axes = ("vocab", None) if cfg.tie_embeddings else ("vocab_table", "embed_table")
+    return {
+        "embedding": ParamSpec(
+            (cfg.vocab_size, cfg.d_model), axes,
+            init="embed", init_scale=0.02, dtype=cfg.dtype,
+        )
+    }
+
+
+def head_layout(cfg):
+    if cfg.tie_embeddings:
+        return {}
+    return {
+        "w": ParamSpec(
+            (cfg.d_model, cfg.vocab_size), ("embed", "vocab"), dtype=cfg.dtype
+        )
+    }
+
+
+def logits(head_params, embed_params, x, cfg):
+    if cfg.tie_embeddings:
+        # contraction over d (unsharded) -> logits sharded over vocab
+        return constrain(
+            jnp.einsum("bsd,vd->bsv", x, embed_params["embedding"]), None, "model"
+        ).astype(jnp.float32)
+    return constrain(
+        jnp.einsum("bsd,dv->bsv", x, head_params["w"]), None, "model"
+    ).astype(jnp.float32)
+
+
+def embed_lookup(table, tokens):
+    """Token embedding lookup (gather).
+
+    The table is sharded over its *embedding* dim ('embed_table' ->
+    'model'), never its vocab rows: a row gather from a vocab-sharded
+    table forces SPMD replication (involuntary full rematerialization),
+    while a gather from an embed-sharded table is fully local per shard
+    and d(table) is a local scatter-add + data-axis reduce.
+    """
+    return table[tokens]

@@ -1,0 +1,97 @@
+"""Declarative parameter layouts.
+
+A model declares its parameters as a pytree of :class:`ParamSpec` (shape +
+logical axis names + init).  From one layout we derive:
+
+* real parameters (``init_params``) for smoke tests / examples,
+* ``jax.ShapeDtypeStruct`` stand-ins (``abstract_params``) for the
+  multi-pod dry-run — no allocation at 398 B scale,
+* ``PartitionSpec``/``NamedSharding`` trees (``param_pspecs``) via the
+  logical-axis rules in :mod:`repro.parallel.sharding`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    logical_axes: tuple[str | None, ...]
+    dtype: Any = jnp.bfloat16
+    init: str = "fan_in"  # fan_in | normal | zeros | ones | embed
+    init_scale: float = 1.0
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.logical_axes):
+            raise ValueError(
+                f"shape {self.shape} vs logical_axes {self.logical_axes}"
+            )
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_one(key, spec: ParamSpec) -> jnp.ndarray:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "embed":
+        scale = spec.init_scale
+    elif spec.init == "fan_in":
+        # fan-in = product of all axes except the last
+        fan_in = max(1, int(np.prod(spec.shape[:-1])) // max(1, spec.shape[0] if len(spec.shape) > 2 else 1))
+        # For stacked layers (leading 'layers'/'stage' axis) fan-in excludes it.
+        non_stack = [
+            d
+            for d, ax in zip(spec.shape, spec.logical_axes)
+            if ax not in ("layers", "stage", "experts")
+        ]
+        fan_in = max(1, int(np.prod(non_stack[:-1]))) if len(non_stack) > 1 else 1
+        scale = spec.init_scale / np.sqrt(fan_in)
+    else:  # normal
+        scale = spec.init_scale
+    x = jax.random.normal(key, spec.shape, jnp.float32) * scale
+    return x.astype(spec.dtype)
+
+
+def init_params(rng: jax.Array, layout: PyTree) -> PyTree:
+    leaves, treedef = jax.tree.flatten(layout, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_init_one(k, s) for k, s in zip(keys, leaves)]
+    )
+
+
+def abstract_params(layout: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        layout,
+        is_leaf=is_spec,
+    )
+
+
+def param_logical_axes(layout: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: s.logical_axes, layout, is_leaf=is_spec)
+
+
+def param_count(layout: PyTree) -> int:
+    return sum(
+        int(np.prod(s.shape))
+        for s in jax.tree.leaves(layout, is_leaf=is_spec)
+    )
+
+
+def cast_layout(layout: PyTree, dtype) -> PyTree:
+    return jax.tree.map(
+        lambda s: dataclasses.replace(s, dtype=dtype), layout, is_leaf=is_spec
+    )

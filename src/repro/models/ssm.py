@@ -1,0 +1,232 @@
+"""Mamba-2 SSD (state-space duality) block [arXiv:2405.21060].
+
+The chunked SSD algorithm *is* a stream computation in the paper's sense:
+sequence chunks are cells, the (H, P, N) state is the value carried from
+cell to cell, intra-chunk work is the per-cell footprint.  The cross-chunk
+recurrence runs either as a sequential scan (the Lazy evaluation) or as an
+associative scan (beyond-paper parallelization of the chain; see
+EXPERIMENTS.md §Perf).
+
+Layout per block (d_inner = expand * d_model, H = d_inner / head_dim):
+
+    in_proj : d -> [z (d_inner), x (d_inner), B (G*N), C (G*N), dt (H)]
+    conv1d  : depthwise width-w over (x ⊕ B ⊕ C)
+    A_log, D, dt_bias : (H,)
+    norm    : gated RMSNorm over d_inner
+    out_proj: d_inner -> d
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.models.params import ParamSpec
+from repro.models.layers import rmsnorm
+
+
+def ssm_dims(cfg: ArchConfig, ssm: SSMConfig):
+    d_inner = ssm.expand * cfg.d_model
+    num_heads = d_inner // ssm.head_dim
+    conv_dim = d_inner + 2 * ssm.num_groups * ssm.state_dim
+    proj_dim = 2 * d_inner + 2 * ssm.num_groups * ssm.state_dim + num_heads
+    return d_inner, num_heads, conv_dim, proj_dim
+
+
+def ssm_layout(cfg: ArchConfig, ssm: SSMConfig, stacked: tuple[int, ...] = ()):
+    d_inner, num_heads, conv_dim, proj_dim = ssm_dims(cfg, ssm)
+    ax = ("layers",) * len(stacked)
+    return {
+        "in_proj": ParamSpec(
+            stacked + (cfg.d_model, proj_dim), ax + ("embed", "ffn"), dtype=cfg.dtype
+        ),
+        "conv_w": ParamSpec(
+            stacked + (ssm.conv_width, conv_dim), ax + ("conv", "ffn"), dtype=cfg.dtype
+        ),
+        "conv_b": ParamSpec(
+            stacked + (conv_dim,), ax + ("ffn",), init="zeros", dtype=cfg.dtype
+        ),
+        "A_log": ParamSpec(stacked + (num_heads,), ax + ("heads",), init="zeros", dtype=jnp.float32),
+        "D": ParamSpec(stacked + (num_heads,), ax + ("heads",), init="ones", dtype=jnp.float32),
+        "dt_bias": ParamSpec(stacked + (num_heads,), ax + ("heads",), init="zeros", dtype=jnp.float32),
+        "norm_scale": ParamSpec(stacked + (d_inner,), ax + ("ffn",), init="ones", dtype=jnp.float32),
+        "out_proj": ParamSpec(
+            stacked + (d_inner, cfg.d_model), ax + ("ffn", "embed"), dtype=cfg.dtype
+        ),
+    }
+
+
+def _split_proj(proj, cfg, ssm):
+    d_inner, num_heads, _, _ = ssm_dims(cfg, ssm)
+    gn = ssm.num_groups * ssm.state_dim
+    z, xs, bb, cc, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + gn, 2 * d_inner + 2 * gn], axis=-1
+    )
+    return z, xs, bb, cc, dt
+
+
+def ssd_chunked(x, dt, a, b_mat, c_mat, d_skip, *, chunk: int, initial_state=None):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P) values; dt: (B,S,H) step sizes (post-softplus);
+    a: (H,) negative decay rates; b_mat/c_mat: (B,S,G,N); d_skip: (H,).
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    hg = h // g  # heads per group
+
+    f32 = jnp.float32
+    # Chunk-major layout for the scan: (nc, B, Q, ...).
+    xc = jnp.moveaxis(x.reshape(bsz, nc, chunk, h, p), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(bsz, nc, chunk, h), 1, 0).astype(f32)
+    bc = jnp.moveaxis(b_mat.reshape(bsz, nc, chunk, g, n), 1, 0).astype(f32)
+    cc = jnp.moveaxis(c_mat.reshape(bsz, nc, chunk, g, n), 1, 0).astype(f32)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    if initial_state is None:
+        # vma seed (see layers.attention_chunked): inherit varying axes
+        s0 = jnp.zeros((bsz, h, n, p), f32) + (x.astype(f32) * 0).sum()
+    else:
+        s0 = initial_state.astype(f32)
+
+    def chunk_cell(carry, inp):
+        """One stream cell: per-chunk SSD with the (H,N,P) state flowing."""
+        x_b, dt_b, b_b, c_b = inp  # (B,Q,H,P) (B,Q,H) (B,Q,G,N) ×2
+        x_f = x_b.astype(f32)
+        da = dt_b * a  # (B,Q,H), negative
+        cum = jnp.cumsum(da, axis=1)
+        total = cum[:, -1, :]  # (B,H)
+
+        # Intra-chunk: L[i,j] = exp(cum_i - cum_j) for j<=i (Q,Q per head).
+        decay = jnp.where(
+            tri[None, :, :, None],
+            jnp.exp(cum[:, :, None, :] - cum[:, None, :, :]),
+            0.0,
+        )  # (B,Q,Q,H)
+        cb = jnp.einsum("bign,bjgn->bijg", c_b, b_b)  # (B,Q,Q,G)
+        cb = jnp.repeat(cb, hg, axis=-1)  # (B,Q,Q,H)
+        w = cb * decay * dt_b[:, None, :, :]
+        y_chunk = jnp.einsum("bijh,bjhp->bihp", w, x_f)
+
+        # Inter-chunk: contribution of the carried state.
+        ch = jnp.repeat(c_b, hg, axis=2).reshape(bsz, chunk, h, n)
+        y_chunk = y_chunk + jnp.einsum(
+            "bqhn,bhnp,bqh->bqhp", ch, carry, jnp.exp(cum)
+        )
+
+        # State update (the future handed to the next cell).
+        state_decay = jnp.exp(total[:, None, :] - cum) * dt_b  # (B,Q,H)
+        bh = jnp.repeat(b_b, hg, axis=2).reshape(bsz, chunk, h, n)
+        new_state = carry * jnp.exp(total)[:, :, None, None] + jnp.einsum(
+            "bqh,bqhn,bqhp->bhnp", state_decay, bh, x_f
+        )
+        y_chunk = y_chunk + x_f * d_skip[None, None, :, None]
+        return new_state, y_chunk.astype(x.dtype)
+
+    # checkpoint per chunk: backward recomputes the (Q,Q,H) decay/score
+    # tensors instead of saving one per chunk (the SSD flash rule).
+    final, ys = lax.scan(jax.checkpoint(chunk_cell), s0, (xc, dtc, bc, cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, h, p)
+    return y, final
+
+
+def causal_conv1d(x, w, b, *, state=None):
+    """Depthwise causal conv. x: (B,S,C), w: (W,C), b: (C,).
+
+    With ``state`` (B,W-1,C): single-step decode (S may be 1); returns
+    (y, new_state).  Without: full-sequence, zero history.
+    """
+    bsz, s, c = x.shape
+    width = w.shape[0]
+    if state is None:
+        hist = jnp.zeros((bsz, width - 1, c), x.dtype)
+    else:
+        hist = state.astype(x.dtype)
+    full = jnp.concatenate([hist, x], axis=1)  # (B, S+W-1, C)
+    # Accumulate shifted taps (no (B,S,W,C) materialization).
+    y = jnp.zeros((bsz, s, c), jnp.float32)
+    for i in range(width):
+        y = y + full[:, i : i + s, :].astype(jnp.float32) * w[i]
+    y = y + b
+    new_state = full[:, -(width - 1) :, :] if width > 1 else hist
+    return jax.nn.silu(y.astype(jnp.float32)).astype(x.dtype), new_state
+
+
+def ssm_block(params, x, cfg: ArchConfig, ssm: SSMConfig, *, cache=None):
+    """Full Mamba-2 block.  x: (B,S,d) -> (y, new_cache).
+
+    cache = {"conv": (B,W-1,conv_dim), "state": (B,H,N,P)} for decode.
+    """
+    from repro.models.layers import constrain_ffn, constrain_res
+
+    d_inner, num_heads, conv_dim, _ = ssm_dims(cfg, ssm)
+    proj = constrain_ffn(jnp.einsum("bsd,dp->bsp", x, params["in_proj"]))
+    z, xs, bb, cc, dt = _split_proj(proj, cfg, ssm)
+
+    conv_in = jnp.concatenate([xs, bb, cc], axis=-1)
+    conv_state = None if cache is None else cache["conv"]
+    conv_out, new_conv = causal_conv1d(
+        conv_in, params["conv_w"], params["conv_b"], state=conv_state
+    )
+    xs, bb, cc = jnp.split(conv_out, [d_inner, d_inner + ssm.num_groups * ssm.state_dim], axis=-1)
+
+    bsz, s, _ = x.shape
+    xh = xs.reshape(bsz, s, num_heads, ssm.head_dim)
+    bm = bb.reshape(bsz, s, ssm.num_groups, ssm.state_dim)
+    cm = cc.reshape(bsz, s, ssm.num_groups, ssm.state_dim)
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dt_act = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+
+    init_state = None if cache is None else cache["state"]
+    if cache is not None and s == 1:
+        # Single-token decode: closed-form state update (no chunking).
+        y, final = _ssd_decode_step(xh, dt_act, a, bm, cm, params["D"], init_state)
+    else:
+        chunk = min(ssm.chunk_size, s)
+        y, final = ssd_chunked(
+            xh, dt_act, a, bm, cm, params["D"], chunk=chunk,
+            initial_state=init_state,
+        )
+
+    y = y.reshape(bsz, s, d_inner)
+    # gated RMSNorm (Mamba-2): norm(y * silu(z))
+    y = rmsnorm(
+        {"scale": params["norm_scale"]},
+        y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+        cfg.norm_eps,
+    )
+    out = constrain_res(jnp.einsum("bsi,id->bsd", y, params["out_proj"]))
+    new_cache = {"conv": new_conv, "state": final}
+    return out, new_cache
+
+
+def _ssd_decode_step(xh, dt, a, bm, cm, d_skip, state):
+    """One-token SSD update. xh: (B,1,H,P); state: (B,H,N,P)."""
+    bsz, _, h, p = xh.shape
+    g, n = bm.shape[2], bm.shape[3]
+    hg = h // g
+    f32 = jnp.float32
+    x0 = xh[:, 0].astype(f32)  # (B,H,P)
+    dt0 = dt[:, 0]  # (B,H)
+    b0 = jnp.repeat(bm[:, 0], hg, axis=1).astype(f32)  # (B,H,N)
+    c0 = jnp.repeat(cm[:, 0], hg, axis=1).astype(f32)
+    decay = jnp.exp(dt0 * a)  # (B,H)
+    st = state.astype(f32) * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhnp", dt0, b0, x0
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", c0, st) + x0 * d_skip[None, :, None]
+    return y[:, None].astype(xh.dtype), st
+
+
+def init_ssm_cache(cfg: ArchConfig, ssm: SSMConfig, batch: int, dtype):
+    d_inner, num_heads, conv_dim, _ = ssm_dims(cfg, ssm)
+    return {
+        "conv": jnp.zeros((batch, ssm.conv_width - 1, conv_dim), dtype),
+        "state": jnp.zeros(
+            (batch, num_heads, ssm.state_dim, ssm.head_dim), jnp.float32
+        ),
+    }

@@ -1,0 +1,497 @@
+"""Composable decoder: dense / MoE / hybrid (Mamba interleave) / VLM cross-
+attention / audio backbone — one implementation, driven by ArchConfig.
+
+Layers are grouped into a repeating *period* = lcm(block pattern, MoE
+interval, cross-attn interval); parameters are stacked over
+``num_layers / period`` groups and the stack is scanned — compile time is
+O(period), not O(num_layers), which is what makes the 100-layer configs
+lowerable.
+
+Step kinds:
+  * ``forward``      — logits for full sequences (train / smoke).
+  * ``prefill``      — forward + materialized KV/SSD caches + last logits.
+  * ``decode_step``  — one token per sequence against preallocated caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.params import ParamSpec
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Block plan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPlan:
+    mixer: str  # "attn" | "mamba" | "cross_attn"
+    ffn: str    # "dense" | "moe" | "none"
+
+
+def effective_period(cfg: ArchConfig) -> int:
+    period = cfg.pattern_period
+    if cfg.moe is not None:
+        period = math.lcm(period, cfg.moe.every_k_layers)
+    if cfg.cross_attn_every > 0:
+        period = math.lcm(period, cfg.cross_attn_every)
+    return period
+
+
+def block_plans(cfg: ArchConfig) -> list[BlockPlan]:
+    period = effective_period(cfg)
+    plans = []
+    for i in range(period):
+        mixer = cfg.block_pattern[i % cfg.pattern_period]
+        if (
+            cfg.cross_attn_every > 0
+            and i % cfg.cross_attn_every == cfg.cross_attn_every - 1
+        ):
+            mixer = "cross_attn"
+        if cfg.d_ff == 0 and cfg.moe is None:
+            ffn = "none"
+        elif cfg.moe is not None and (
+            i % cfg.moe.every_k_layers == cfg.moe.every_k_layers - 1
+        ):
+            ffn = "moe"
+        else:
+            ffn = "dense"
+        plans.append(BlockPlan(mixer, ffn))
+    return plans
+
+
+# ---------------------------------------------------------------------------
+# Layout
+# ---------------------------------------------------------------------------
+
+
+def model_layout(cfg: ArchConfig) -> PyTree:
+    period = effective_period(cfg)
+    if cfg.num_layers % period != 0:
+        raise ValueError(f"{cfg.num_layers=} not divisible by period {period}")
+    groups = cfg.num_layers // period
+    stacked = (groups,)
+    plans = block_plans(cfg)
+
+    blocks: dict[str, PyTree] = {}
+    for i, plan in enumerate(plans):
+        blk: dict[str, PyTree] = {}
+        norm_layout, _ = L.make_norm(cfg.norm, cfg.d_model, stacked)
+        blk["norm_mixer"] = norm_layout
+        if plan.mixer in ("attn", "cross_attn"):
+            blk["attn"] = L.attn_layout(cfg, stacked, cross=plan.mixer == "cross_attn")
+            if plan.mixer == "cross_attn":
+                blk["xattn_gate"] = {
+                    "gate": ParamSpec(stacked + (1,), ("layers", None), init="zeros", dtype=jnp.float32)
+                }
+        else:
+            blk["mamba"] = S.ssm_layout(cfg, cfg.ssm, stacked)
+        if plan.ffn != "none":
+            norm2, _ = L.make_norm(cfg.norm, cfg.d_model, stacked)
+            blk["norm_ffn"] = norm2
+            if plan.ffn == "moe":
+                blk["moe"] = M.moe_layout(cfg, cfg.moe, stacked)
+            else:
+                blk["mlp"] = L.mlp_layout(cfg, stacked=stacked)
+        blocks[f"block{i}"] = blk
+
+    final_norm, _ = L.make_norm(cfg.norm, cfg.d_model, ())
+    return {
+        "embed": L.embed_layout(cfg),
+        "blocks": blocks,
+        "final_norm": final_norm,
+        "head": L.head_layout(cfg),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Cache layout (decode)
+# ---------------------------------------------------------------------------
+
+
+def cache_layout(cfg: ArchConfig, batch: int, max_len: int) -> PyTree:
+    """Abstract cache spec: dict mirroring blocks, leaves ShapeDtypeStruct.
+
+    Attention: K/V (groups, B, Smax, KV, dh).  Mamba: conv + state.
+    Cross-attention: precomputed vision K/V (groups, B, V, KV, dh).
+    """
+    groups = cfg.num_layers // effective_period(cfg)
+    plans = block_plans(cfg)
+    caches: dict[str, PyTree] = {}
+    for i, plan in enumerate(plans):
+        if plan.mixer == "attn":
+            shape = (groups, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+            caches[f"block{i}"] = {
+                "k": jax.ShapeDtypeStruct(shape, cfg.dtype),
+                "v": jax.ShapeDtypeStruct(shape, cfg.dtype),
+            }
+        elif plan.mixer == "cross_attn":
+            shape = (groups, batch, cfg.vision_tokens, cfg.num_kv_heads, cfg.head_dim)
+            caches[f"block{i}"] = {
+                "k": jax.ShapeDtypeStruct(shape, cfg.dtype),
+                "v": jax.ShapeDtypeStruct(shape, cfg.dtype),
+            }
+        if plan.mixer == "mamba":
+            d_inner, num_heads, conv_dim, _ = S.ssm_dims(cfg, cfg.ssm)
+            caches[f"block{i}"] = {
+                "conv": jax.ShapeDtypeStruct(
+                    (groups, batch, cfg.ssm.conv_width - 1, conv_dim), cfg.dtype
+                ),
+                "state": jax.ShapeDtypeStruct(
+                    (groups, batch, num_heads, cfg.ssm.state_dim, cfg.ssm.head_dim),
+                    jnp.float32,
+                ),
+            }
+    return caches
+
+
+def cache_logical_axes(cfg: ArchConfig) -> PyTree:
+    """Logical axes per cache leaf (for sharding rules)."""
+    plans = block_plans(cfg)
+    axes: dict[str, PyTree] = {}
+    for i, plan in enumerate(plans):
+        if plan.mixer == "attn":
+            ax = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+            axes[f"block{i}"] = {"k": ax, "v": ax}
+        elif plan.mixer == "cross_attn":
+            ax = ("layers", "batch", None, "kv_heads", "head_dim")
+            axes[f"block{i}"] = {"k": ax, "v": ax}
+        if plan.mixer == "mamba":
+            axes[f"block{i}"] = {
+                "conv": ("layers", "batch", None, "ffn"),
+                "state": ("layers", "batch", "heads", "state", None),
+            }
+    return axes
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> PyTree:
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_layout(cfg, batch, max_len)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _norm(cfg, params, x):
+    if cfg.norm == "rmsnorm":
+        return L.rmsnorm(params, x, cfg.norm_eps)
+    return L.layernorm_nonparam(x, cfg.norm_eps)
+
+
+def _self_attn(
+    params, x, cfg, *, positions, cache=None, cache_pos=None, kv_len=None,
+    attn_impl="dense", q_chunk=512, kv_chunk=1024, causal_skip=None,
+):
+    """Self-attention; with cache: decode/chunked-prefill.
+
+    Decode (S==1): ``cache_pos`` is (B,) per-sequence write positions.
+    Chunked prefill (S>1): ``cache_pos`` is a scalar chunk offset; the
+    chunk is written at [pos, pos+S) and attends causally to the cache.
+    """
+    q, k, v = L.attn_project_qkv(params, x, cfg, positions)
+    new_cache = None
+    if cache is not None:
+        bsz, s = x.shape[:2]
+        if s == 1:
+            idx = jnp.arange(bsz)
+            ck = cache["k"].at[idx, cache_pos].set(k[:, 0])
+            cv = cache["v"].at[idx, cache_pos].set(v[:, 0])
+            causal, q_offset = False, 0
+        else:  # chunked prefill: scalar offset
+            zero = jnp.zeros((), cache_pos.dtype if hasattr(cache_pos, "dtype") else jnp.int32)
+            start = (zero, cache_pos, zero, zero)
+            ck = lax.dynamic_update_slice(cache["k"], k, start)
+            cv = lax.dynamic_update_slice(cache["v"], v, start)
+            causal, q_offset = True, cache_pos
+        new_cache = {"k": ck, "v": cv}
+        ctx = L.attention(
+            q, ck, cv, impl=attn_impl, causal=causal, q_offset=q_offset,
+            kv_len=kv_len, q_chunk=q_chunk, kv_chunk=kv_chunk,
+            causal_skip=causal_skip,
+        )
+    else:
+        ctx = L.attention(
+            q, k, v, impl=attn_impl, causal=True,
+            q_chunk=q_chunk, kv_chunk=kv_chunk, causal_skip=causal_skip,
+        )
+    return L.attn_out(params, ctx), new_cache, (k, v)
+
+
+def _cross_attn(params, gate, x, cfg, *, vision_kv=None, vision_embeds=None,
+                attn_impl="dense", q_chunk=512, kv_chunk=1024):
+    """Cross-attention to vision tokens (gated, llama-3.2 style)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if "q_norm" in params:
+        q = L.rmsnorm({"scale": params["q_norm"]}, q, cfg.norm_eps)
+    if vision_kv is not None:
+        k, v = vision_kv["k"], vision_kv["v"]
+    else:
+        k = jnp.einsum("bvd,dhk->bvhk", vision_embeds, params["wk"])
+        v = jnp.einsum("bvd,dhk->bvhk", vision_embeds, params["wv"])
+        if "k_norm" in params:
+            k = L.rmsnorm({"scale": params["k_norm"]}, k, cfg.norm_eps)
+    ctx = L.attention(
+        q, k, v, impl=attn_impl, causal=False, q_chunk=q_chunk, kv_chunk=kv_chunk
+    )
+    out = L.attn_out(params, ctx)
+    return jnp.tanh(gate["gate"]).astype(out.dtype) * out, {"k": k, "v": v}
+
+
+def _apply_group(
+    group_params,
+    x,
+    cfg,
+    plans,
+    *,
+    positions,
+    group_cache=None,
+    cache_pos=None,
+    kv_len=None,
+    vision_embeds=None,
+    collect_kv=False,
+    attn_impl="dense",
+    q_chunk=512,
+    kv_chunk=1024,
+    causal_skip=None,
+):
+    """Apply one period group.  Returns (x, new_group_cache, aux_losses)."""
+    new_cache: dict[str, PyTree] = {}
+    aux = {"moe_lb_loss": 0.0, "moe_z_loss": 0.0, "moe_drop_fraction": 0.0}
+    num_moe = 0
+    for i, plan in enumerate(plans):
+        blk = group_params[f"block{i}"]
+        h = _norm(cfg, blk.get("norm_mixer"), x)
+        if plan.mixer == "attn":
+            cache_i = None if group_cache is None else group_cache.get(f"block{i}")
+            out, c_new, kv = _self_attn(
+                blk["attn"], h, cfg,
+                positions=positions, cache=cache_i, cache_pos=cache_pos,
+                kv_len=kv_len, attn_impl=attn_impl,
+                q_chunk=q_chunk, kv_chunk=kv_chunk, causal_skip=causal_skip,
+            )
+            if c_new is not None:
+                new_cache[f"block{i}"] = c_new
+            elif collect_kv:
+                new_cache[f"block{i}"] = {"k": kv[0], "v": kv[1]}
+        elif plan.mixer == "cross_attn":
+            # Fresh vision embeds (prefill) take priority over cached K/V.
+            vkv = None
+            if vision_embeds is None and group_cache is not None:
+                vkv = group_cache.get(f"block{i}")
+            out, vkv_new = _cross_attn(
+                blk["attn"], blk["xattn_gate"], h, cfg,
+                vision_kv=vkv, vision_embeds=vision_embeds,
+                attn_impl=attn_impl, q_chunk=q_chunk, kv_chunk=kv_chunk,
+            )
+            if collect_kv or group_cache is not None:
+                new_cache[f"block{i}"] = vkv_new
+        else:  # mamba
+            cache_i = None if group_cache is None else group_cache.get(f"block{i}")
+            out, c_new = S.ssm_block(blk["mamba"], h, cfg, cfg.ssm, cache=cache_i)
+            if group_cache is not None or collect_kv:
+                new_cache[f"block{i}"] = c_new
+        x = L.constrain_res(x + out)
+
+        if plan.ffn != "none":
+            h = _norm(cfg, blk.get("norm_ffn"), x)
+            if plan.ffn == "moe":
+                out, moe_aux = M.moe_apply(blk["moe"], h, cfg.moe)
+                for key in ("moe_lb_loss", "moe_z_loss", "moe_drop_fraction"):
+                    aux[key] = aux[key] + moe_aux[key]
+                num_moe += 1
+            else:
+                out = L.mlp(blk["mlp"], h)
+            x = L.constrain_res(x + out)
+    if num_moe:
+        aux = {k: v / num_moe for k, v in aux.items()}
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Model entry points
+# ---------------------------------------------------------------------------
+
+
+def _embed_input(params, cfg, tokens=None, embeds=None):
+    if cfg.embeds_input:
+        assert embeds is not None, "stubbed-frontend arch takes embeddings"
+        return embeds.astype(cfg.dtype)
+    return L.embed_lookup(params["embed"]["embedding"], tokens)
+
+
+def forward(
+    params,
+    cfg: ArchConfig,
+    *,
+    tokens=None,
+    embeds=None,
+    vision_embeds=None,
+    collect_kv=False,
+    cache_pad_to=None,
+    attn_impl="dense",
+    q_chunk=512,
+    kv_chunk=1024,
+    causal_skip=None,
+    remat=True,
+    unroll=1,
+):
+    """Full-sequence forward.  Returns (logits, caches|None, aux)."""
+    plans = block_plans(cfg)
+    x = _embed_input(params, cfg, tokens, embeds)
+    bsz, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+
+    def group_fn(x, group_params):
+        x, kv, aux = _apply_group(
+            group_params, x, cfg, plans,
+            positions=positions, vision_embeds=vision_embeds,
+            collect_kv=collect_kv, attn_impl=attn_impl,
+            q_chunk=q_chunk, kv_chunk=kv_chunk, causal_skip=causal_skip,
+        )
+        return x, (kv, aux)
+
+    if remat:
+        group_fn = jax.checkpoint(group_fn)
+    x, (kvs, auxs) = lax.scan(group_fn, x, params["blocks"], unroll=unroll)
+    aux = jax.tree.map(lambda a: jnp.mean(a), auxs)
+    x = _norm(cfg, params.get("final_norm"), x)
+    lg = L.logits(params.get("head"), params["embed"], x, cfg)
+
+    caches = None
+    if collect_kv:
+        caches = kvs
+        if cache_pad_to is not None:
+            caches = jax.tree.map(
+                partial(_pad_cache_seq, plans=plans, pad_to=cache_pad_to),
+                caches,
+            )
+    return lg, caches, aux
+
+
+def _pad_cache_seq(x, *, plans, pad_to):
+    # pads K/V (groups,B,S,KV,dh) to (groups,B,pad_to,KV,dh); leaves others
+    if x.ndim == 5 and x.shape[2] < pad_to:
+        pad = [(0, 0)] * 5
+        pad[2] = (0, pad_to - x.shape[2])
+        return jnp.pad(x, pad)
+    return x
+
+
+def decode_step(
+    params,
+    caches,
+    cfg: ArchConfig,
+    *,
+    tokens=None,
+    embeds=None,
+    lengths=None,
+    attn_impl="dense",
+    kv_chunk=1024,
+    unroll=1,
+):
+    """One-token step.  tokens: (B,) int32 (or embeds (B,1,d)); lengths:
+    (B,) current context length per sequence (cache write position).
+    Returns (logits (B,V), new_caches)."""
+    plans = block_plans(cfg)
+    if cfg.embeds_input:
+        x = embeds.astype(cfg.dtype)
+        bsz = x.shape[0]
+    else:
+        x = L.embed_lookup(params["embed"]["embedding"], tokens)[:, None, :]
+        bsz = tokens.shape[0]
+    if lengths is None:
+        lengths = jnp.zeros((bsz,), jnp.int32)
+    positions = lengths[:, None]
+    kv_len = (lengths + 1)[:, None]  # (B,1) valid kv after the write
+
+    def group_fn(x, scan_in):
+        group_params, group_cache = scan_in
+        x, new_cache, aux = _apply_group(
+            group_params, x, cfg, plans,
+            positions=positions, group_cache=group_cache,
+            cache_pos=lengths, kv_len=kv_len,
+            attn_impl=attn_impl, kv_chunk=kv_chunk, q_chunk=1,
+        )
+        return x, new_cache
+
+    x, new_caches = lax.scan(group_fn, x, (params["blocks"], caches), unroll=unroll)
+    x = _norm(cfg, params.get("final_norm"), x)
+    lg = L.logits(params.get("head"), params["embed"], x, cfg)
+    return lg[:, 0, :], new_caches
+
+
+def _cache_seq_len(caches):
+    for blk in caches.values():
+        if "k" in blk:
+            return blk["k"].shape[2]
+    return None
+
+
+def prefill_step(
+    params,
+    caches,
+    cfg: ArchConfig,
+    *,
+    tokens=None,
+    embeds=None,
+    pos=0,
+    vision_embeds=None,
+    attn_impl="chunked",
+    q_chunk=512,
+    kv_chunk=1024,
+    unroll=1,
+):
+    """Chunked streaming prefill: process a prompt chunk at offset ``pos``.
+
+    The chunk sequence is a bounded stream whose carried value is the
+    KV/SSD cache (the paper's construct on the sequence axis): chunk c's
+    attention forces the cache future produced by chunk c-1.
+    tokens: (B, C).  Returns (last-position logits (B,V), new caches).
+    """
+    plans = block_plans(cfg)
+    if cfg.embeds_input:
+        x = embeds.astype(cfg.dtype)
+    else:
+        x = L.embed_lookup(params["embed"]["embedding"], tokens)
+    bsz, s, _ = x.shape
+    static_pos = isinstance(pos, int)
+    if not static_pos:
+        pos = jnp.asarray(pos, jnp.int32)
+    positions = (pos + jnp.arange(s))[None, :]
+    # Whole-cache prefill (pos 0, chunk covers the buffer): no padding to
+    # mask and a static zero offset — unlocks causal block skipping.
+    full_cover = static_pos and pos == 0 and _cache_seq_len(caches) == s
+    kv_len = None if full_cover else pos + s
+
+    def group_fn(x, scan_in):
+        group_params, group_cache = scan_in
+        x, new_cache, _ = _apply_group(
+            group_params, x, cfg, plans,
+            positions=positions, group_cache=group_cache,
+            cache_pos=pos, kv_len=kv_len, vision_embeds=vision_embeds,
+            attn_impl=attn_impl, q_chunk=q_chunk, kv_chunk=kv_chunk,
+        )
+        return x, new_cache
+
+    x, new_caches = lax.scan(group_fn, x, (params["blocks"], caches), unroll=unroll)
+    x = _norm(cfg, params.get("final_norm"), x)
+    lg = L.logits(params.get("head"), params["embed"], x[:, -1:, :], cfg)
+    return lg[:, 0, :], new_caches

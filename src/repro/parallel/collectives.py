@@ -1,0 +1,69 @@
+"""Collective helpers: overlap idioms and ring primitives.
+
+These wrap the Future combinators of :mod:`repro.core.future` into the
+shapes distributed layers want.  Under ``shard_map`` the futures are real
+async collectives on TPU (``collective-permute-start/done``); under plain
+pjit, GSPMD owns the schedule and these reduce to ordinary ops.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.future import defer
+
+PyTree = Any
+
+
+def ring_all_gather_overlapped(
+    x: jnp.ndarray,
+    axis_name: str,
+    compute_fn: Callable[[jnp.ndarray, int], jnp.ndarray],
+):
+    """All-gather by ring permute, overlapping ``compute_fn`` per shard.
+
+    ``compute_fn(shard, slot)`` consumes each peer's shard as it arrives —
+    the paper's stream: each arriving shard is a cell, the in-flight
+    permute is the future tail.  Returns the list of per-slot results.
+    Used for FSDP-style layer compute where the weight shard arriving
+    next overlaps the matmul on the current one.
+    """
+    size = lax.axis_size(axis_name)
+    idx = lax.axis_index(axis_name)
+    perm = [(i, (i + 1) % size) for i in range(size)]
+    results = []
+    shard = x
+    for hop in range(size):
+        # start moving the next shard now (future) ...
+        fut = defer(lambda s: lax.ppermute(s, axis_name, perm), shard)
+        # ... while computing on the current one
+        slot = (idx - hop) % size
+        results.append(compute_fn(shard, slot))
+        shard = fut.force(anchor=results[-1])
+    return results
+
+
+def reduce_scatter_then_all_gather(x: jnp.ndarray, axis_name: str):
+    """The SP decomposition of an all-reduce: psum_scatter + all_gather.
+
+    Splitting lets the two halves straddle the residual compute between
+    them (Megatron sequence parallelism); callers place compute between
+    the returned future's creation and force.
+    """
+    scattered = lax.psum_scatter(x, axis_name, tiled=True)
+    return defer(lambda s: lax.all_gather(s, axis_name, tiled=True), scattered)
+
+
+def pod_allreduce_compressed(grads: PyTree, axis_name: str, error: PyTree | None):
+    """Cross-pod gradient all-reduce in bf16 with error feedback."""
+    from repro.train.compression import compress_decompress
+
+    q, new_error = compress_decompress(grads, error)
+    reduced = jax.tree.map(
+        lambda g: lax.pmean(g.astype(jnp.bfloat16), axis_name).astype(jnp.float32),
+        q,
+    )
+    return reduced, new_error

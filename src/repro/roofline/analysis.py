@@ -1,0 +1,211 @@
+"""Roofline analysis from compiled dry-run artifacts (TPU v5e targets).
+
+Three terms, in seconds, per (arch × shape × mesh):
+
+    compute    = HLO_FLOPs          / (chips × 197e12 FLOP/s bf16)
+    memory     = HLO_bytes_accessed / (chips × 819e9  B/s HBM)
+    collective = collective_bytes   /  (chips × 50e9 B/s per-link ICI)
+
+``cost_analysis()`` on the compiled executable supplies FLOPs and bytes.
+XLA reports them for the *partitioned per-device module*; we detect which
+convention is in play by magnitude against MODEL_FLOPS and normalize to
+per-device (see ``normalize_flops``).  Collective bytes are not in
+cost_analysis: we parse the post-SPMD HLO text and sum output-shape bytes
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction (per-device traffic approximation; an
+all-reduce moves ~2× its operand in a ring, folded into a configurable
+multiplier per kind).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any
+
+import numpy as np
+
+# --- v5e hardware constants (per chip) --------------------------------------
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW_PER_LINK = 50e9  # ~ 4 links/chip on v5e; we charge one link (worst case)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# ring all-reduce moves 2(n-1)/n ≈ 2× the buffer per device;
+# all-gather / reduce-scatter move (n-1)/n ≈ 1× the *global* buffer;
+# permute and all-to-all move ~1× of what they carry.
+_TRAFFIC_MULTIPLIER = {
+    "all-gather": 1.0,
+    "all-reduce": 2.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+# e.g. "bf16[16,512,8192]{2,1,0}" possibly inside a tuple "(bf16[...], u32[])"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:%[\w.\-]+|[\w.\-]+)\s*=\s*(\([^)]*\)|[\w\[\],{}]+)\s+"
+    r"((?:%?)(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?)\(",
+    re.MULTILINE,
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict[str, Any]:
+    """Sum output-shape bytes per collective kind from HLO text.
+
+    '-done' ops are skipped (the '-start' carries the shape) and so are
+    ops inside fusions (collectives are never fused).  Bytes from
+    collectives inside while-loop bodies are multiplied by the trip count
+    when XLA left a known trip count marker; scan-lowered loops carry it.
+    """
+    out = {k: 0 for k in _COLLECTIVE_KINDS}
+    counts = {k: 0 for k in _COLLECTIVE_KINDS}
+    for m in _INSTR_RE.finditer(hlo_text):
+        shape_str, opname, kind = m.group(1), m.group(2), m.group(3)
+        if opname.endswith("-done"):
+            continue
+        out[kind] += _shape_bytes(shape_str)
+        counts[kind] += 1
+    total = sum(
+        out[k] * _TRAFFIC_MULTIPLIER[k] for k in _COLLECTIVE_KINDS
+    )
+    return {"bytes_by_kind": out, "counts": counts, "weighted_bytes": total}
+
+
+def while_trip_counts(hlo_text: str) -> list[int]:
+    """Best-effort scan trip counts (trip_count= attributes)."""
+    return [int(x) for x in re.findall(r"trip_count=(\d+)", hlo_text)]
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float          # per device, raw from cost_analysis
+    hlo_bytes: float          # per device (scaled by microbatch factor)
+    collective_bytes: float   # per device (weighted, scaled)
+    model_flops: float        # 6ND train / 2ND inference (global)
+    analytic_flops: float = 0.0  # exact accounting (repro.roofline.analytic)
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+
+    def finalize(self) -> "RooflineTerms":
+        # compute term from the exact analytic count (scan-proof); HLO raw
+        # kept for cross-checking.  Memory/collective terms are HLO-derived.
+        flops_per_dev = (
+            self.analytic_flops / self.chips
+            if self.analytic_flops
+            else self.hlo_flops
+        )
+        self.compute_s = flops_per_dev / PEAK_FLOPS_BF16
+        self.memory_s = self.hlo_bytes / HBM_BW
+        self.collective_s = self.collective_bytes / ICI_BW_PER_LINK
+        return self
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / compiled-compute: remat/padding/redundancy waste."""
+        total = self.analytic_flops or self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def step_time_s(self) -> float:
+        """Lower bound assuming perfect overlap: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute roofline fraction (MFU against the bound)."""
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS_BF16)
+        return ideal / self.step_time_s if self.step_time_s else 0.0
+
+    def to_json(self) -> dict:
+        return {
+            **dataclasses.asdict(self),
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "step_time_s": self.step_time_s,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(cfg, shape, active_params: int) -> float:
+    """6·N·D for training, 2·N·D for inference steps (N = active params)."""
+    if shape.kind == "train":
+        return 6.0 * active_params * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * active_params * shape.tokens
+    # decode: one token per sequence
+    return 2.0 * active_params * shape.global_batch
+
+
+def active_param_count(cfg, layout) -> int:
+    """Parameter count with MoE experts scaled by top_k/num_experts."""
+    import jax
+
+    from repro.models.params import is_spec
+
+    total = 0
+    for path, spec in jax.tree_util.tree_flatten_with_path(
+        layout, is_leaf=is_spec
+    )[0]:
+        n = int(np.prod(spec.shape))
+        keystr = jax.tree_util.keystr(path)
+        if "experts" in spec.logical_axes:
+            frac = cfg.moe.top_k / cfg.moe.num_experts
+            n = int(n * frac)
+        if "embed'" in keystr or "embedding" in keystr:
+            pass  # embeddings are gathers, not matmuls; keep for 6ND convention
+        total += n
+    return total
+
+
+def normalize_flops(raw_flops: float, chips: int, model_flops_: float) -> float:
+    """Return per-device FLOPs regardless of XLA's reporting convention."""
+    if model_flops_ <= 0:
+        return raw_flops
+    # If raw is within 1.5 decades of the *global* figure, it's global.
+    if raw_flops > model_flops_ / 30:
+        return raw_flops / chips
+    return raw_flops

@@ -1,0 +1,135 @@
+"""Exact analytic FLOP accounting per (arch × shape).
+
+XLA's ``cost_analysis`` counts while-loop bodies once, so any scan left
+rolled (attention KV stream, SSD chunk stream, microbatch loop)
+undercounts.  The dry-run unrolls the layer scan and scales the microbatch
+loop, but the inner streaming loops stay rolled by design — so the
+*compute* roofline term uses this module's exact matmul accounting, and
+the HLO figure is recorded alongside as a cross-check
+(EXPERIMENTS.md §Roofline documents the method).
+
+Conventions: one MAC = 2 FLOPs; fwd-only for inference; training =
+fwd + backward (2×) + remat recompute (1× when remat enabled) = 4× fwd
+for all layer compute, 3× (no remat) for the unrematerialized head/loss.
+Attention is charged full S² (our chunked impl does not skip fully-masked
+causal blocks — a recorded inefficiency that §Perf attacks); the
+causal-skip variant halves it.
+"""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.models import ssm as S
+from repro.models.transformer import block_plans, effective_period
+
+
+def _attn_layer_flops(cfg, tokens, s_kv, *, causal_skip=False):
+    d, h, kv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    proj = 2 * tokens * d * (h + 2 * kv) * dh + 2 * tokens * h * dh * d
+    score_factor = 0.5 if causal_skip else 1.0
+    attn = 2 * 2 * tokens * s_kv * h * dh * score_factor  # QK^T + PV
+    return proj, attn
+
+
+def _cross_attn_layer_flops(cfg, tokens, batch):
+    d, h, kv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    vt = cfg.vision_tokens
+    proj = (
+        2 * tokens * d * h * dh                   # q
+        + 2 * batch * vt * d * 2 * kv * dh        # k,v over vision tokens
+        + 2 * tokens * h * dh * d                 # out
+    )
+    attn = 2 * 2 * tokens * vt * h * dh
+    return proj, attn
+
+
+def _mlp_flops(cfg, tokens, d_ff):
+    return 2 * 3 * tokens * cfg.d_model * d_ff
+
+
+def _moe_flops(cfg, tokens):
+    moe = cfg.moe
+    router = 2 * tokens * cfg.d_model * moe.num_experts
+    experts = 2 * 3 * tokens * moe.top_k * cfg.d_model * moe.d_ff_expert
+    shared = (
+        2 * 3 * tokens * cfg.d_model * moe.d_ff_expert * moe.num_shared_experts
+    )
+    return router + experts + shared
+
+
+def _ssd_layer_flops(cfg, tokens, batch):
+    ssm = cfg.ssm
+    d_inner, h, conv_dim, proj_dim = S.ssm_dims(cfg, ssm)
+    n, p, g = ssm.state_dim, ssm.head_dim, ssm.num_groups
+    q = min(ssm.chunk_size, tokens // max(batch, 1))
+    proj = 2 * tokens * cfg.d_model * proj_dim + 2 * tokens * d_inner * cfg.d_model
+    conv = 2 * tokens * conv_dim * ssm.conv_width
+    # intra-chunk: cb (Q×N×Q per group) + y_intra (Q×Q×P per head)
+    intra = 2 * tokens * q * (g * n + h * p)
+    # states + y_inter: two (N×P) contractions per token-head
+    inter = 2 * 2 * tokens * h * n * p
+    norm = 5 * tokens * d_inner
+    return proj + conv + intra + inter + norm
+
+
+def forward_flops(
+    cfg: ArchConfig,
+    tokens: int,
+    batch: int,
+    s_kv: int,
+    *,
+    causal_skip: bool = False,
+    with_head: bool = True,
+) -> dict[str, float]:
+    """One forward pass, token count ``tokens``, KV context ``s_kv``."""
+    plans = block_plans(cfg)
+    groups = cfg.num_layers // effective_period(cfg)
+    proj = attn = ffn = ssd = 0.0
+    for plan in plans:
+        if plan.mixer == "attn":
+            p_, a_ = _attn_layer_flops(cfg, tokens, s_kv, causal_skip=causal_skip)
+            proj += p_
+            attn += a_
+        elif plan.mixer == "cross_attn":
+            p_, a_ = _cross_attn_layer_flops(cfg, tokens, batch)
+            proj += p_
+            attn += a_
+        else:
+            ssd += _ssd_layer_flops(cfg, tokens, batch)
+        if plan.ffn == "dense":
+            ffn += _mlp_flops(cfg, tokens, cfg.d_ff)
+        elif plan.ffn == "moe":
+            ffn += _moe_flops(cfg, tokens)
+    out = {
+        "proj": proj * groups,
+        "attn": attn * groups,
+        "ffn": ffn * groups,
+        "ssd": ssd * groups,
+        "head": 2 * tokens * cfg.d_model * cfg.vocab_size if with_head else 0.0,
+    }
+    out["total"] = sum(out.values())
+    return out
+
+
+def step_flops(cfg: ArchConfig, shape: ShapeCell, *, remat=True, causal_skip=False):
+    """Analytic FLOPs of the lowered step for this cell (global)."""
+    if shape.kind == "train":
+        f = forward_flops(
+            cfg, shape.tokens, shape.global_batch, shape.seq_len,
+            causal_skip=causal_skip,
+        )
+        mult = 4.0 if remat else 3.0  # fwd + bwd(2x) [+ remat fwd]
+        body = (f["proj"] + f["attn"] + f["ffn"] + f["ssd"]) * mult
+        head = f["head"] * 3.0  # head/loss not rematerialized
+        return {"total": body + head, "forward": f}
+    if shape.kind == "prefill":
+        f = forward_flops(
+            cfg, shape.tokens, shape.global_batch, shape.seq_len,
+            causal_skip=causal_skip,
+        )
+        return {"total": f["total"], "forward": f}
+    # decode: one token per sequence, context s_kv
+    f = forward_flops(
+        cfg, shape.global_batch, shape.global_batch, shape.seq_len,
+        causal_skip=False,
+    )
+    return {"total": f["total"], "forward": f}

@@ -1,0 +1,242 @@
+"""Loop-aware post-SPMD HLO text analysis.
+
+XLA's ``cost_analysis()`` counts while-loop bodies once and its CPU
+bytes-accessed model ignores fusion boundaries.  This parser rebuilds both
+metrics from the compiled HLO text:
+
+* **Loop multipliers** — jax scans lower to ``while`` ops annotated with
+  ``backend_config={"known_trip_count":{"n":...}}``; every computation
+  reachable as a while body/condition inherits ``parent × trip``.
+* **Collective bytes** — output-shape bytes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute, × loop multiplier,
+  × per-kind ring-traffic factor.
+* **HBM traffic** — Σ over instructions of (operands + output) bytes,
+  with fusions counted at their boundary (internal ops live in
+  registers/VMEM — the TPU model), dynamic-update-slice counted at the
+  update size (in-place on TPU), and layout/metadata ops skipped.
+
+Per-device numbers (post-SPMD shapes are per-device).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*.*\{\s*$")
+_INSTR_RE = re.compile(r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+_SKIP_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "iota", "while", "conditional", "call", "partition-id",
+    "replica-id", "rng-bit-generator",
+}
+
+COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+TRAFFIC_MULTIPLIER = {
+    "all-gather": 1.0,
+    "all-reduce": 2.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    opcode: str
+    operands: list[str]
+    attrs: str
+
+    @property
+    def out_bytes(self) -> int:
+        return shape_bytes(self.shape)
+
+
+def _split_rhs(rhs: str) -> tuple[str, str, str, str] | None:
+    """rhs = '<shape> <opcode>(<operands>)<attrs>' -> parts."""
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                shape, rest = rhs[: i + 1], rhs[i + 1 :]
+                break
+        else:
+            return None
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return None
+        shape, rest = rhs[:sp], rhs[sp:]
+    rest = rest.strip()
+    m = re.match(r"([\w\-]+)\(", rest)
+    if not m:
+        return None
+    opcode = m.group(1)
+    depth, start = 0, rest.find("(")
+    for i in range(start, len(rest)):
+        depth += rest[i] == "("
+        depth -= rest[i] == ")"
+        if depth == 0:
+            operands_str = rest[start + 1 : i]
+            attrs = rest[i + 1 :]
+            break
+    else:
+        return None
+    return shape, opcode, operands_str, attrs
+
+
+def parse_module(text: str):
+    """Returns (computations: {name: [Instr]}, entry_name)."""
+    comps: dict[str, list[Instr]] = {}
+    entry = None
+    cur: list[Instr] | None = None
+    for line in text.splitlines():
+        header = _COMP_HEADER_RE.match(line)
+        if header:
+            name = header.group(2)
+            comps[name] = []
+            cur = comps[name]
+            if header.group(1):
+                entry = name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        parts = _split_rhs(m.group(2))
+        if parts is None:
+            continue
+        shape, opcode, operands_str, attrs = parts
+        operands = re.findall(r"%([\w.\-]+)", operands_str)
+        cur.append(Instr(m.group(1), shape, opcode, operands, attrs))
+    return comps, entry
+
+
+def loop_multipliers(comps, entry) -> dict[str, float]:
+    """Computation name -> product of enclosing while trip counts."""
+    mult = {entry: 1.0}
+    # whiles: (parent, body, cond, trip)
+    edges = []
+    for comp_name, instrs in comps.items():
+        for ins in instrs:
+            if ins.opcode != "while":
+                continue
+            body = re.search(r"body=%?([\w.\-]+)", ins.attrs)
+            cond = re.search(r"condition=%?([\w.\-]+)", ins.attrs)
+            trip_m = _TRIP_RE.search(ins.attrs)
+            trip = float(trip_m.group(1)) if trip_m else 1.0
+            if body and cond:
+                edges.append((comp_name, body.group(1), cond.group(1), trip))
+    changed = True
+    while changed:
+        changed = False
+        for parent, body, cond, trip in edges:
+            if parent in mult:
+                for child, m in ((body, mult[parent] * trip), (cond, mult[parent])):
+                    if mult.get(child) != m:
+                        mult[child] = m
+                        changed = True
+    return mult
+
+
+def _instr_hbm_bytes(ins: Instr, name_bytes: dict[str, int]) -> int:
+    if ins.opcode in _SKIP_OPS:
+        return 0
+    out = ins.out_bytes
+    if ins.opcode == "dynamic-update-slice":
+        # in-place on TPU: traffic = update read + write
+        upd = name_bytes.get(ins.operands[1], 0) if len(ins.operands) > 1 else 0
+        return 2 * upd
+    if ins.opcode == "broadcast":
+        return out  # read side is negligible
+    ops = sum(name_bytes.get(o, 0) for o in ins.operands)
+    return out + ops
+
+
+def analyze_hlo(text: str) -> dict[str, Any]:
+    """Loop-aware collective bytes + HBM traffic (per device)."""
+    comps, entry = parse_module(text)
+    mult = loop_multipliers(comps, entry)
+
+    coll_bytes = {k: 0.0 for k in COLLECTIVE_KINDS}
+    coll_counts = {k: 0 for k in COLLECTIVE_KINDS}
+    coll_static = {k: 0 for k in COLLECTIVE_KINDS}
+    top: list[tuple[float, str, str, float, str]] = []
+    hbm = 0.0
+
+    for comp_name, m in mult.items():
+        instrs = comps.get(comp_name)
+        if instrs is None:
+            continue
+        name_bytes = {i.name: i.out_bytes for i in instrs}
+        for ins in instrs:
+            base = ins.opcode
+            if base.endswith("-start"):
+                base = base[: -len("-start")]
+            if base.endswith("-done"):
+                continue
+            if base in COLLECTIVE_KINDS:
+                coll_bytes[base] += ins.out_bytes * m
+                coll_counts[base] += int(m)
+                coll_static[base] += 1
+                opm = re.search(r'op_name="([^"]+)"', ins.attrs)
+                top.append((
+                    ins.out_bytes * m * TRAFFIC_MULTIPLIER[base],
+                    base, ins.shape[:60], m,
+                    (opm.group(1)[-120:] if opm else ""),
+                ))
+            hbm += _instr_hbm_bytes(ins, name_bytes) * m
+    top.sort(reverse=True)
+
+    weighted = sum(coll_bytes[k] * TRAFFIC_MULTIPLIER[k] for k in COLLECTIVE_KINDS)
+    return {
+        "collective_bytes_by_kind": coll_bytes,
+        "collective_counts_dynamic": coll_counts,
+        "collective_counts_static": coll_static,
+        "collective_weighted_bytes": weighted,
+        "hbm_traffic_bytes": hbm,
+        "num_computations": len(comps),
+        "num_loops": sum(1 for v in mult.values() if v > 1),
+        "top_collectives": [
+            {"gib": round(b / 2**30, 2), "kind": k, "shape": s,
+             "mult": m, "op": o}
+            for b, k, s, m, o in top[:12]
+        ],
+    }

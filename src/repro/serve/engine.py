@@ -1,0 +1,181 @@
+"""Serving engine: continuous batching over a slotted KV cache.
+
+The engine is the paper's construct at the request level: each submitted
+request returns a *future* (its completion), the decode loop is the
+stream, and chunked prefill (``prefill_chunk``) is the §7 chunk-size knob
+balancing time-to-first-token against decode-step latency.
+
+Architecture:
+  * ``max_batch`` cache slots; per-slot length/active/eos state on host.
+  * admit: new requests prefill in chunks (B=1) and are scattered into a
+    free slot's cache rows.
+  * step: one batched ``decode_step`` over all slots (inactive slots are
+    masked); sampled tokens append to per-slot buffers.
+  * complete: slots retire on EOS or max_new_tokens; their futures resolve.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 8
+    max_len: int = 1024
+    prefill_chunk: int = 128
+    max_new_tokens: int = 64
+    eos_id: int = -1  # -1: never; run to max_new_tokens
+    temperature: float = 0.0  # 0 => greedy
+    attn_impl: str = "dense"
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (P,) int32
+    max_new_tokens: int
+    out_tokens: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, params, cfg: ArchConfig, scfg: ServeConfig):
+        assert not cfg.embeds_input, "engine serves token-input archs"
+        self.params = params
+        self.cfg = cfg
+        self.scfg = scfg
+        self.cache = T.init_cache(cfg, scfg.max_batch, scfg.max_len)
+        self.lengths = np.zeros(scfg.max_batch, np.int32)
+        self.active: list[Request | None] = [None] * scfg.max_batch
+        self.queue: deque[Request] = deque()
+        self._uid = 0
+        self._rng = np.random.default_rng(scfg.seed)
+
+        self._decode = jax.jit(
+            partial(
+                T.decode_step, cfg=cfg, attn_impl=scfg.attn_impl,
+            )
+        )
+        self._prefill = jax.jit(
+            partial(
+                T.prefill_step, cfg=cfg, attn_impl=scfg.attn_impl,
+            ),
+            static_argnames=(),
+        )
+
+    # -- public API ----------------------------------------------------------
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int | None = None) -> Request:
+        """Returns the request handle (its .done flag is the future)."""
+        req = Request(
+            uid=self._uid,
+            prompt=np.asarray(prompt, np.int32),
+            max_new_tokens=max_new_tokens or self.scfg.max_new_tokens,
+        )
+        self._uid += 1
+        self.queue.append(req)
+        return req
+
+    def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
+        finished = []
+        for _ in range(max_steps):
+            finished.extend(self.step())
+            if not self.queue and all(r is None for r in self.active):
+                break
+        return finished
+
+    # -- internals -----------------------------------------------------------
+
+    def _free_slot(self) -> int | None:
+        for i, r in enumerate(self.active):
+            if r is None:
+                return i
+        return None
+
+    def _admit(self):
+        while self.queue:
+            slot = self._free_slot()
+            if slot is None:
+                return
+            req = self.queue.popleft()
+            self._prefill_into_slot(req, slot)
+
+    def _prefill_into_slot(self, req: Request, slot: int):
+        ck = self.scfg.prefill_chunk
+        prompt = req.prompt
+        plen = len(prompt)
+        full = (plen // ck) * ck
+        single = T.init_cache(self.cfg, 1, self.scfg.max_len)
+        logits = None
+        for c in range(full // ck):
+            chunk = jnp.asarray(prompt[None, c * ck : (c + 1) * ck])
+            logits, single = self._prefill(
+                self.params, single, tokens=chunk, pos=c * ck
+            )
+        # Tail tokens (plen % chunk) stream through single decode steps.
+        for t in range(full, plen):
+            logits, single = self._decode(
+                self.params, single,
+                tokens=jnp.asarray(prompt[None, t]),
+                lengths=jnp.full((1,), t, jnp.int32),
+            )
+        # Scatter this request's cache rows into the batch cache at `slot`.
+        def insert(batch_leaf, single_leaf):
+            return batch_leaf.at[:, slot].set(single_leaf[:, 0])
+
+        self.cache = jax.tree.map(insert, self.cache, single)
+        self.lengths[slot] = plen
+        self.active[slot] = req
+        tok = self._sample(np.asarray(logits)[0])
+        req.out_tokens.append(int(tok))
+
+    def _sample(self, logits: np.ndarray) -> int:
+        if self.scfg.temperature <= 0:
+            return int(np.argmax(logits))
+        p = np.exp(logits / self.scfg.temperature - np.max(logits))
+        p /= p.sum()
+        return int(self._rng.choice(len(p), p=p))
+
+    def step(self) -> list[Request]:
+        """Admit, one batched decode step, retire. Returns newly finished."""
+        self._admit()
+        slots = [i for i, r in enumerate(self.active) if r is not None]
+        if not slots:
+            return []
+        # last token per active slot (prompt end or last generated)
+        tokens = np.zeros(self.scfg.max_batch, np.int32)
+        for i in slots:
+            req = self.active[i]
+            tokens[i] = req.out_tokens[-1] if req.out_tokens else req.prompt[-1]
+        logits, self.cache = self._decode(
+            self.params, self.cache,
+            tokens=jnp.asarray(tokens),
+            lengths=jnp.asarray(self.lengths),
+        )
+        logits = np.asarray(logits)
+        finished = []
+        for i in slots:
+            req = self.active[i]
+            self.lengths[i] += 1
+            tok = self._sample(logits[i])
+            req.out_tokens.append(tok)
+            hit_eos = tok == self.scfg.eos_id
+            full = self.lengths[i] + 1 >= self.scfg.max_len
+            if len(req.out_tokens) >= req.max_new_tokens or hit_eos or full:
+                req.done = True
+                finished.append(req)
+                self.active[i] = None
+        return finished

@@ -1,0 +1,54 @@
+"""Gradient compression for slow links (cross-pod all-reduce).
+
+The pod axis of the production mesh rides inter-pod links (~an order of
+magnitude slower than intra-pod ICI).  Two standard tricks, both applied
+only to the *pod-axis* reduction:
+
+* **bf16 reduction** — gradients are cast to bf16 before the cross-pod
+  all-reduce and the *local* error (the cast residual) is fed back into
+  the next step's gradient (error feedback), keeping the update unbiased
+  over time [Seide et al. 2014-style EF].
+* **moment-dtype compression** lives in :mod:`repro.train.optimizer`.
+
+Under pure pjit the collective is implicit, so compression is expressed by
+casting at the accumulation boundary; with explicit ``shard_map`` pipelines
+the cast wraps the ``psum`` itself.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def compress_decompress(grads: PyTree, error: PyTree | None, dtype=jnp.bfloat16):
+    """Cast-with-error-feedback.  Returns (compressed_f32, new_error).
+
+    grads are fp32; ``error`` is the residual carried from the previous
+    step (same structure, fp32), or None on step 0.
+    """
+    if error is None:
+        error = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q = corrected.astype(dtype)
+        new_e = corrected - q.astype(jnp.float32)
+        return q.astype(jnp.float32), new_e
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (
+        jax.tree.unflatten(treedef, [o[0] for o in out]),
+        jax.tree.unflatten(treedef, [o[1] for o in out]),
+    )
+
+
+def init_error_state(abstract_grads: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda g: jax.ShapeDtypeStruct(g.shape, jnp.float32), abstract_grads
+    )

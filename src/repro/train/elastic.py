@@ -1,0 +1,52 @@
+"""Elastic scaling: re-mesh and re-shard on device-count change.
+
+When a pod is cordoned (hardware fault) or capacity is added, the job
+resumes on a different device count.  Because checkpoints are stored as
+logical (unsharded) arrays and shardings are *derived* from the mesh via
+the logical-axis rules, elasticity is: build the new mesh → derive new
+shardings → device_put the restored state.  No resharding code is specific
+to any topology.
+
+``choose_mesh_shape`` picks the largest (data, model) factorization that
+(a) keeps ``model`` a divisor of the preferred TP width and (b) uses every
+remaining device for data parallelism; global batch is kept constant by
+adjusting ``num_microbatches`` (the stream chunk count — the paper's knob
+again) so per-device microbatch size stays fixed.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.parallel.sharding import param_shardings
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: tuple[int, ...]
+    axis_names: tuple[str, ...]
+    num_microbatches: int
+
+
+def choose_mesh_shape(
+    num_devices: int, preferred_model: int = 16, global_batch: int = 256,
+    per_device_micro_tokens: int | None = None,
+) -> ElasticPlan:
+    model = preferred_model
+    while model > 1 and num_devices % model != 0:
+        model //= 2
+    data = num_devices // model
+    # Keep per-device microbatch constant: more data shards => fewer chunks.
+    num_micro = max(1, global_batch // max(data, 1) // 4)
+    # num_microbatches must divide the global batch.
+    while global_batch % (num_micro) != 0:
+        num_micro -= 1
+    return ElasticPlan((data, model), ("data", "model"), num_micro)
+
+
+def remesh_state(state, layout, rules, new_mesh):
+    """Re-shard a (restored) state pytree onto a new mesh."""
+    shardings = param_shardings(layout, rules, new_mesh)
+    return jax.tree.map(jax.device_put, state, shardings)

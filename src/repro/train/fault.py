@@ -1,0 +1,136 @@
+"""Fault tolerance: checkpoint/restart, heartbeats, straggler mitigation.
+
+``ResilientLoop`` wraps the jitted train step with the runbook a 1000+
+node fleet needs:
+
+* **checkpoint/restart** — periodic async checkpoints; on any step
+  exception the loop restores the latest checkpoint and replays.  The
+  data pipeline is step-keyed (deterministic PRNG per step), so replayed
+  steps see identical batches — restart is bitwise reproducible.
+* **heartbeats** — a monotonic per-step heartbeat file; an external
+  supervisor (or the test suite) detects a wedged worker by heartbeat age
+  and SIGKILLs it, landing in the restart path above.
+* **straggler mitigation** — per-step wall times feed an EMA; steps slower
+  than ``straggler_factor``× the EMA are counted and surfaced.  On a real
+  pod the action is to cordon the slow host and re-shard (see
+  :mod:`repro.train.elastic`); here the detector + policy hook are real
+  and the cordon action is a callback.
+* **preemption windows** — ``request_stop()`` (SIGTERM handler) finishes
+  the current step, writes a final checkpoint, and exits cleanly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import signal
+import time
+from typing import Any, Callable
+
+import jax
+
+from repro.train.checkpoint import Checkpointer
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class FaultConfig:
+    checkpoint_every: int = 50
+    heartbeat_path: str | None = None
+    straggler_factor: float = 2.0
+    straggler_ema: float = 0.9
+    max_restarts: int = 3
+
+
+class ResilientLoop:
+    def __init__(
+        self,
+        step_fn: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree, dict]],
+        checkpointer: Checkpointer,
+        fault_cfg: FaultConfig,
+        on_straggler: Callable[[int, float], None] | None = None,
+    ):
+        self.step_fn = step_fn
+        self.ckpt = checkpointer
+        self.cfg = fault_cfg
+        self.on_straggler = on_straggler
+        self._stop = False
+        self._ema_step_time: float | None = None
+        self.stats = {"restarts": 0, "stragglers": 0, "steps": 0}
+
+    def request_stop(self, *_):
+        self._stop = True
+
+    def install_signal_handlers(self):
+        signal.signal(signal.SIGTERM, self.request_stop)
+
+    def _heartbeat(self, step: int):
+        if self.cfg.heartbeat_path:
+            with open(self.cfg.heartbeat_path, "w") as f:
+                f.write(f"{step} {time.time()}\n")
+
+    def _track_time(self, step: int, dt: float):
+        if self._ema_step_time is None:
+            self._ema_step_time = dt
+            return
+        if dt > self.cfg.straggler_factor * self._ema_step_time:
+            self.stats["stragglers"] += 1
+            if self.on_straggler:
+                self.on_straggler(step, dt / self._ema_step_time)
+        a = self.cfg.straggler_ema
+        self._ema_step_time = a * self._ema_step_time + (1 - a) * dt
+
+    def run(
+        self,
+        params: PyTree,
+        opt_state: PyTree,
+        batch_fn: Callable[[int], PyTree],
+        num_steps: int,
+        start_step: int = 0,
+        fail_injector: Callable[[int], None] | None = None,
+    ) -> tuple[PyTree, PyTree, int, list[dict]]:
+        """Run to ``num_steps`` with restart-on-failure.  Returns final state."""
+        step = start_step
+        history: list[dict] = []
+        restarts_left = self.cfg.max_restarts
+        while step < num_steps and not self._stop:
+            try:
+                if fail_injector is not None:
+                    fail_injector(step)
+                batch = batch_fn(step)
+                t0 = time.perf_counter()
+                params, opt_state, metrics = self.step_fn(
+                    params, opt_state, batch
+                )
+                jax.block_until_ready(metrics["loss"])
+                dt = time.perf_counter() - t0
+                self._track_time(step, dt)
+                self._heartbeat(step)
+                history.append(
+                    {"step": step, **{k: float(v) for k, v in metrics.items()}}
+                )
+                step += 1
+                self.stats["steps"] += 1
+                if step % self.cfg.checkpoint_every == 0 or step == num_steps:
+                    self.ckpt.save(
+                        step, {"params": params, "opt_state": opt_state}
+                    )
+            except (KeyboardInterrupt, SystemExit):
+                raise
+            except Exception:
+                if restarts_left <= 0:
+                    raise
+                restarts_left -= 1
+                self.stats["restarts"] += 1
+                restored_step = self.ckpt.latest_step()
+                if restored_step is None:
+                    # No checkpoint yet: restart from the initial state.
+                    step = start_step
+                    continue
+                state, step = self.ckpt.restore(
+                    {"params": params, "opt_state": opt_state}
+                )
+                params, opt_state = state["params"], state["opt_state"]
+        self.ckpt.save(step, {"params": params, "opt_state": opt_state})
+        self.ckpt.wait()
+        return params, opt_state, step, history

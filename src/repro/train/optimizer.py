@@ -1,0 +1,111 @@
+"""AdamW with dtype-configurable moments and global-norm clipping.
+
+The ≥100 B configs cannot hold fp32 Adam moments on 16 GB/chip even fully
+sharded (398 B × 8 B/param / 256 chips = 12.4 GB for m+v alone), so moments
+are stored in a configurable dtype — bf16 by default for huge models —
+with fp32 math at update time.  This is the "optimizer state compression"
+leg of the distributed-optimization tricks (DESIGN §3); gradient
+compression for the cross-pod all-reduce lives in
+:mod:`repro.train.compression`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: Any = jnp.float32  # bf16 for >=100B configs
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+def init_opt_state(params: PyTree, cfg: AdamWConfig) -> PyTree:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_opt_state(abstract_params: PyTree, cfg: AdamWConfig) -> PyTree:
+    zeros = lambda p: jax.ShapeDtypeStruct(p.shape, cfg.moment_dtype)
+    return {
+        "m": jax.tree.map(zeros, abstract_params),
+        "v": jax.tree.map(zeros, abstract_params),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def lr_schedule(step, cfg: AdamWConfig):
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(1.0, cfg.warmup_steps)
+    progress = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(1.0, cfg.total_steps - cfg.warmup_steps),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * progress))
+    decayed = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.learning_rate * jnp.minimum(warm, decayed)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(
+            jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree.leaves(tree)
+        )
+    )
+
+
+def adamw_update(
+    params: PyTree, grads: PyTree, opt_state: PyTree, cfg: AdamWConfig
+) -> tuple[PyTree, PyTree, dict]:
+    """One update; fp32 math, params/moments cast back to storage dtypes."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = lr_schedule(step, cfg)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def update_one(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        update = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        update = update + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * update
+        return new_p.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    out = [update_one(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_state = {
+        "m": jax.tree.unflatten(treedef, [o[1] for o in out]),
+        "v": jax.tree.unflatten(treedef, [o[2] for o in out]),
+        "step": step,
+    }
+    metrics = {"grad_norm": gnorm, "learning_rate": lr}
+    return new_params, new_state, metrics

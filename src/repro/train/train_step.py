@@ -1,0 +1,147 @@
+"""Training step: loss, microbatch gradient accumulation, optimizer update.
+
+The microbatch axis is a bounded stream (the paper's chunking knob): under
+plain accumulation it is evaluated Lazily (sequential scan, constant
+memory); under the pipeline config the same microbatches flow through
+layer stages on the ``pod`` axis (Future).  ``num_microbatches`` trades
+activation memory against fill/drain bubble per
+:func:`repro.core.chunking.optimal_num_chunks`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.core.chunking import chunk_axis
+from repro.models import transformer as T
+from repro.train import optimizer as O
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    num_microbatches: int = 1
+    accum_dtype: Any = jnp.float32  # bf16 for >=100B configs
+    remat: bool = True
+    unroll: bool = False  # unroll scans (dry-run: exact HLO flop counts)
+    attn_impl: str = "chunked"
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    causal_skip: bool | None = None  # None = auto (§Perf iteration 6)
+    z_loss_coef: float = 1e-4
+    moe_lb_coef: float = 1e-2
+    moe_z_coef: float = 1e-3
+
+
+def lm_loss(params, cfg: ArchConfig, batch: PyTree, tcfg: TrainConfig):
+    """Next-token CE (fp32 logits, logsumexp form) + z-loss + MoE aux."""
+    kw = {}
+    if cfg.embeds_input:
+        kw["embeds"] = batch["embeds"]
+    else:
+        kw["tokens"] = batch["tokens"]
+    if cfg.vision_tokens:
+        kw["vision_embeds"] = batch["vision_embeds"]
+    logits, _, aux = T.forward(
+        params, cfg,
+        attn_impl=tcfg.attn_impl, q_chunk=tcfg.q_chunk, kv_chunk=tcfg.kv_chunk,
+        causal_skip=tcfg.causal_skip,
+        remat=tcfg.remat, unroll=True if tcfg.unroll else 1, **kw,
+    )
+    labels = batch["labels"]  # (B, S)
+    mask = batch.get("loss_mask", jnp.ones_like(labels, jnp.float32))
+    lse = jax.nn.logsumexp(logits, axis=-1)  # (B,S)
+    # gold logit via masked sum (partitions over a vocab-sharded logits
+    # axis; take_along_axis would gather across shards)
+    vocab_iota = jnp.arange(logits.shape[-1], dtype=labels.dtype)
+    gold = jnp.sum(
+        jnp.where(vocab_iota == labels[..., None], logits, 0.0), axis=-1
+    )
+    ce = (lse - gold) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(ce) / denom
+    z_loss = jnp.sum(jnp.square(lse) * mask) / denom
+    total = loss + tcfg.z_loss_coef * z_loss
+    if cfg.moe is not None:
+        total = (
+            total
+            + tcfg.moe_lb_coef * aux["moe_lb_loss"]
+            + tcfg.moe_z_coef * aux["moe_z_loss"]
+        )
+    metrics = {"loss": loss, "z_loss": z_loss, **aux}
+    return total, metrics
+
+
+def accumulate_grads(
+    params, cfg: ArchConfig, batch: PyTree, tcfg: TrainConfig,
+    param_pspecs: PyTree | None = None,
+):
+    """Scan microbatches, accumulating grads in ``accum_dtype``."""
+    grad_fn = jax.value_and_grad(lm_loss, has_aux=True)
+    if tcfg.num_microbatches == 1:
+        (_, metrics), grads = grad_fn(params, cfg, batch, tcfg)
+        return grads, metrics
+
+    micro = chunk_axis(batch, tcfg.num_microbatches)
+
+    def step(carry, mb):
+        acc, metrics_acc = carry
+        (_, metrics), grads = grad_fn(params, cfg, mb, tcfg)
+        if param_pspecs is not None:
+            # Constrain the raw per-microbatch grads BEFORE the add: the
+            # data-axis reduction then lowers to a reduce-scatter onto the
+            # FSDP shard (1× bytes) instead of an all-reduce of the full
+            # gradient (2×) followed by slicing.  §Perf iteration 1.
+            from repro.parallel.sharding import maybe_constrain
+            grads = jax.tree.map(maybe_constrain, grads, param_pspecs)
+        acc = jax.tree.map(
+            lambda a, g: a + g.astype(tcfg.accum_dtype), acc, grads
+        )
+        if param_pspecs is not None:
+            from repro.parallel.sharding import maybe_constrain
+            acc = jax.tree.map(maybe_constrain, acc, param_pspecs)
+        metrics_acc = jax.tree.map(lambda a, m: a + m, metrics_acc, metrics)
+        return (acc, metrics_acc), None
+
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, tcfg.accum_dtype), params
+    )
+    if param_pspecs is not None:
+        from repro.parallel.sharding import maybe_constrain
+        zeros = jax.tree.map(maybe_constrain, zeros, param_pspecs)
+    metrics0 = {
+        "loss": 0.0, "z_loss": 0.0,
+        "moe_lb_loss": 0.0, "moe_z_loss": 0.0, "moe_drop_fraction": 0.0,
+    }
+    metrics0 = {k: jnp.zeros((), jnp.float32) for k in metrics0}
+    (grads, metrics), _ = lax.scan(
+        step, (zeros, metrics0), micro,
+        unroll=tcfg.num_microbatches if tcfg.unroll else 1,
+    )
+    inv = 1.0 / tcfg.num_microbatches
+    return (
+        jax.tree.map(lambda g: g * inv, grads),
+        jax.tree.map(lambda m: m * inv, metrics),
+    )
+
+
+def make_train_step(
+    cfg: ArchConfig, tcfg: TrainConfig, ocfg: O.AdamWConfig,
+    param_pspecs: PyTree | None = None,
+):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        grads, metrics = accumulate_grads(params, cfg, batch, tcfg, param_pspecs)
+        params, opt_state, opt_metrics = O.adamw_update(
+            params, grads, opt_state, cfg=ocfg
+        )
+        return params, opt_state, {**metrics, **opt_metrics}
+
+    return train_step

@@ -1,0 +1,17 @@
+"""Shared fixtures.  NB: no XLA_FLAGS here — tests see the real device
+count (1 on this container); multi-device behaviour is exercised via
+subprocesses in test_multidevice.py, and the 512-device dry-run only ever
+sets the flag inside repro.launch.dryrun."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture()
+def np_rng():
+    return np.random.default_rng(0)

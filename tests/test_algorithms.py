@@ -1,0 +1,111 @@
+"""Paper algorithms: limb arithmetic, sparse polynomials, prime sieve."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.algorithms import limb
+from repro.algorithms import polynomial as poly
+from repro.algorithms import sieve
+
+
+class TestLimb:
+    @hypothesis.given(st.integers(0, 2**90 - 1), st.integers(0, 2**90 - 1))
+    @hypothesis.settings(max_examples=50, deadline=None)
+    def test_add_matches_bigint(self, a, b):
+        la, lb = limb.from_int(a, 8), limb.from_int(b, 8)
+        assert limb.to_int(limb.add(la, lb)) == (a + b) % (1 << (13 * 8))
+
+    @hypothesis.given(st.integers(0, 2**50 - 1), st.integers(0, 2**50 - 1))
+    @hypothesis.settings(max_examples=50, deadline=None)
+    def test_mul_matches_bigint(self, a, b):
+        la, lb = limb.from_int(a, 8), limb.from_int(b, 8)
+        assert limb.to_int(limb.mul(la, lb)) == (a * b) % (1 << (13 * 8))
+
+    def test_overflow_raises(self):
+        with pytest.raises(OverflowError):
+            limb.from_int(1 << 26, 2)
+
+    def test_is_zero(self):
+        assert bool(limb.is_zero(limb.from_int(0, 4)))
+        assert not bool(limb.is_zero(limb.from_int(7, 4)))
+
+    def test_batched_mul(self):
+        a = jnp.stack([limb.from_int(v, 6) for v in (3, 1 << 30, 12345)])
+        b = limb.from_int(99991, 6)
+        out = limb.mul(a, b[None, :])
+        for i, v in enumerate((3, 1 << 30, 12345)):
+            assert limb.to_int(out[i]) == v * 99991
+
+
+@st.composite
+def small_poly(draw, max_terms=6, max_exp=5, max_coef=1 << 20):
+    n = draw(st.integers(1, max_terms))
+    terms = {}
+    for _ in range(n):
+        e = tuple(draw(st.integers(0, max_exp)) for _ in range(3))
+        terms[e] = draw(st.integers(1, max_coef))
+    return terms
+
+
+class TestPolynomial:
+    @hypothesis.given(small_poly(), small_poly())
+    @hypothesis.settings(max_examples=15, deadline=None)
+    def test_times_matches_bigint_oracle(self, tx, ty):
+        x = poly.from_dict(tx, 8, 8)
+        y = poly.from_dict(ty, 8, 8)
+        ref = poly.reference_product(tx, ty)
+        got = poly.to_dict(
+            poly.times(x, y, num_x_chunks=2, terms_per_cell=2, acc_capacity=128)
+        )
+        assert got == ref
+
+    @hypothesis.given(small_poly(), small_poly())
+    @hypothesis.settings(max_examples=15, deadline=None)
+    def test_dense_matches_stream(self, tx, ty):
+        x = poly.from_dict(tx, 8, 8)
+        y = poly.from_dict(ty, 8, 8)
+        assert poly.to_dict(poly.times_dense(x, y, capacity=128)) == (
+            poly.reference_product(tx, ty)
+        )
+
+    def test_plus_cancellation_clears_lane(self):
+        # modular wraparound makes a + b ≡ 0: the lane must clear
+        mod = 1 << (13 * 4)
+        a = poly.from_dict({(1, 0, 0): 5}, 4, 4)
+        b = poly.from_dict({(1, 0, 0): mod - 5}, 4, 4)
+        out = poly.plus(a, b, capacity=8)
+        assert poly.to_dict(out) == {}
+        assert int(poly.num_terms(out)) == 0
+
+    def test_fateman_big_factor(self):
+        x = poly.fateman_poly(3, 32, 12, big_factor=100000000001)
+        ref = poly.reference_product(poly.to_dict(x), poly.to_dict(x))
+        got = poly.to_dict(
+            poly.times(x, x, num_x_chunks=2, terms_per_cell=4, acc_capacity=512)
+        )
+        assert got == ref
+
+    def test_key_packing_roundtrip(self):
+        for e in [(0, 0, 0), (5, 3, 1), (40, 40, 40)]:
+            assert poly.unpack_key(poly.pack_key(e)) == e
+
+
+class TestSieve:
+    @hypothesis.given(st.integers(10, 1200))
+    @hypothesis.settings(max_examples=10, deadline=None)
+    def test_matches_eratosthenes(self, limit):
+        ref = sieve.reference_primes(limit)
+        p, count = sieve.run_sieve(limit, block_size=64, primes_per_cell=4)
+        p = np.asarray(p)
+        assert int(count) == len(ref)
+        np.testing.assert_array_equal(p[p > 0], ref)
+
+    def test_chunking_invariance(self):
+        # paper §7: grouping cells must not change the result
+        ref = sieve.reference_primes(500)
+        for k in (1, 2, 8):
+            p, _ = sieve.run_sieve(500, block_size=32, primes_per_cell=k)
+            p = np.asarray(p)
+            np.testing.assert_array_equal(p[p > 0], ref)

@@ -1,0 +1,52 @@
+"""Elastic scaling: mesh re-derivation and state re-sharding."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.elastic import ElasticPlan, choose_mesh_shape, remesh_state
+
+
+class TestChooseMeshShape:
+    @hypothesis.given(st.sampled_from([8, 16, 32, 64, 128, 256, 384, 512]))
+    @hypothesis.settings(max_examples=20, deadline=None)
+    def test_uses_all_devices(self, n):
+        plan = choose_mesh_shape(n)
+        assert plan.mesh_shape[0] * plan.mesh_shape[1] == n
+
+    @hypothesis.given(st.sampled_from([8, 16, 32, 64, 256, 512]))
+    @hypothesis.settings(max_examples=20, deadline=None)
+    def test_microbatches_divide_global_batch(self, n):
+        plan = choose_mesh_shape(n, global_batch=256)
+        assert 256 % plan.num_microbatches == 0
+
+    def test_model_axis_shrinks_when_indivisible(self):
+        plan = choose_mesh_shape(24, preferred_model=16)
+        assert plan.mesh_shape == (3, 8)
+
+    def test_halving_devices_keeps_running(self):
+        # pod loss: 512 -> 256 (cordon one pod)
+        before = choose_mesh_shape(512)
+        after = choose_mesh_shape(256)
+        assert after.mesh_shape[1] == before.mesh_shape[1] == 16
+        assert after.mesh_shape[0] == before.mesh_shape[0] // 2
+
+
+def test_remesh_state_roundtrip():
+    """Restore-then-reshard onto a new (1-device) mesh preserves values."""
+    from repro.configs.registry import get_config, smoke_config
+    from repro.models import transformer as T
+    from repro.models.params import init_params
+    from repro.parallel import sharding as SH
+
+    sc = smoke_config(get_config("olmo-1b"))
+    layout = T.model_layout(sc)
+    params = init_params(jax.random.PRNGKey(0), layout)
+    mesh = jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+    resharded = remesh_state(params, layout, SH.TRAIN_RULES, mesh)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(resharded)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,146 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd.ops import ssd_chunked_pallas
+from repro.kernels.ssd.ref import ssd_ref
+from repro.models.ssm import ssd_chunked
+
+
+FLASH_CASES = [
+    # b, h, kv, sq, sk, dh, causal, dtype, tol
+    (2, 4, 4, 128, 128, 64, True, jnp.float32, 2e-5),
+    (1, 8, 2, 256, 256, 64, True, jnp.float32, 2e-5),
+    (1, 4, 4, 128, 128, 128, True, jnp.bfloat16, 2e-2),
+    (2, 2, 1, 128, 256, 64, False, jnp.float32, 2e-5),
+    (1, 16, 4, 256, 256, 64, True, jnp.bfloat16, 2e-2),
+    (1, 2, 2, 384, 384, 32, True, jnp.float32, 2e-5),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES, ids=str)
+def test_flash_attention_vs_ref(case):
+    b, h, kv, sq, sk, dh, causal, dt, tol = case
+    rng = np.random.default_rng(42)
+    q = jnp.asarray(rng.normal(size=(b, h, sq, dh)), dt)
+    k = jnp.asarray(rng.normal(size=(b, kv, sk, dh)), dt)
+    v = jnp.asarray(rng.normal(size=(b, kv, sk, dh)), dt)
+    out = flash_attention_bhsd(
+        q, k, v, causal=causal, block_q=128, block_k=128, interpret=True
+    )
+    ref = attention_ref(q, k, v, causal=causal)
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32))))
+    assert err < tol, err
+
+
+def test_flash_wrapper_layout_matches_model_attention():
+    from repro.models.layers import attention_dense
+
+    rng = np.random.default_rng(1)
+    b, s, h, kv, dh = 2, 256, 8, 2, 64
+    q = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kv, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kv, dh)), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, interpret=True, block_q=128, block_k=128)
+    ref = attention_dense(q, k, v, causal=True)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-4
+
+
+SSD_CASES = [
+    # b, s, h, p, g, n, chunk
+    (2, 128, 4, 64, 1, 128, 32),
+    (1, 256, 8, 64, 2, 64, 64),
+    (2, 64, 2, 32, 1, 32, 16),
+    (1, 128, 4, 64, 4, 32, 128),
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES, ids=str)
+@pytest.mark.parametrize("recurrence", ["scan", "associative"])
+def test_ssd_kernel_vs_ref(case, recurrence):
+    b, s, h, p, g, n, chunk = case
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(b, s, h)), jnp.float32)
+    a = -jnp.asarray(rng.uniform(0.5, 1.5, size=(h,)), jnp.float32)
+    bm = jnp.asarray(rng.normal(size=(b, s, g, n)), jnp.float32) / np.sqrt(n)
+    cm = jnp.asarray(rng.normal(size=(b, s, g, n)), jnp.float32) / np.sqrt(n)
+    dsk = jnp.asarray(rng.normal(size=(h,)), jnp.float32)
+    y_ref, s_ref = ssd_ref(x, dt, a, bm, cm, dsk)
+    y, s_fin = ssd_chunked_pallas(
+        x, dt, a, bm, cm, dsk, chunk=chunk, interpret=True, recurrence=recurrence
+    )
+    assert float(jnp.max(jnp.abs(y.astype(jnp.float32) - y_ref))) < 2e-3
+    assert float(jnp.max(jnp.abs(s_fin - s_ref))) < 2e-3
+
+
+def test_ssd_model_scan_matches_ref():
+    rng = np.random.default_rng(3)
+    b, s, h, p, g, n = 2, 96, 4, 32, 1, 64
+    x = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(b, s, h)), jnp.float32)
+    a = -jnp.asarray(rng.uniform(0.5, 1.5, size=(h,)), jnp.float32)
+    bm = jnp.asarray(rng.normal(size=(b, s, g, n)), jnp.float32) / np.sqrt(n)
+    cm = jnp.asarray(rng.normal(size=(b, s, g, n)), jnp.float32) / np.sqrt(n)
+    dsk = jnp.asarray(rng.normal(size=(h,)), jnp.float32)
+    y_ref, s_ref = ssd_ref(x, dt, a, bm, cm, dsk)
+    y, s_fin = ssd_chunked(x, dt, a, bm, cm, dsk, chunk=32)
+    assert float(jnp.max(jnp.abs(y.astype(jnp.float32) - y_ref))) < 2e-3
+    assert float(jnp.max(jnp.abs(s_fin - s_ref))) < 2e-3
+
+
+def test_ssd_initial_state_continuation():
+    """Splitting a sequence across two calls must equal one call (the
+    stream's carried value handoff — checkpoint/restart of the cell chain)."""
+    rng = np.random.default_rng(5)
+    b, s, h, p, g, n = 1, 128, 2, 32, 1, 32
+    x = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(b, s, h)), jnp.float32)
+    a = -jnp.asarray(rng.uniform(0.5, 1.5, size=(h,)), jnp.float32)
+    bm = jnp.asarray(rng.normal(size=(b, s, g, n)), jnp.float32) / np.sqrt(n)
+    cm = jnp.asarray(rng.normal(size=(b, s, g, n)), jnp.float32) / np.sqrt(n)
+    dsk = jnp.zeros((h,), jnp.float32)
+    y_full, s_full = ssd_chunked(x, dt, a, bm, cm, dsk, chunk=32)
+    half = s // 2
+    y1, s1 = ssd_chunked(
+        x[:, :half], dt[:, :half], a, bm[:, :half], cm[:, :half], dsk, chunk=32
+    )
+    y2, s2 = ssd_chunked(
+        x[:, half:], dt[:, half:], a, bm[:, half:], cm[:, half:], dsk,
+        chunk=32, initial_state=s1,
+    )
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([y1, y2], axis=1)), np.asarray(y_full),
+        atol=1e-4,
+    )
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full), atol=1e-4)
+
+
+@hypothesis.given(
+    st.integers(1, 3), st.integers(1, 4),
+    st.sampled_from([16, 32]), st.sampled_from([16, 32]),
+)
+@hypothesis.settings(max_examples=8, deadline=None)
+def test_ssd_associative_combine_is_associative(b, h, n, p):
+    """The (decay, state) semigroup underlying the beyond-paper recurrence."""
+    from repro.kernels.ssd.ops import _combine
+
+    rng = np.random.default_rng(b * 100 + h)
+    def elem():
+        return (
+            jnp.asarray(rng.uniform(0.1, 1.0, size=(b, h)), jnp.float32),
+            jnp.asarray(rng.normal(size=(b, h, n, p)), jnp.float32),
+        )
+
+    x, y, z = elem(), elem(), elem()
+    left = _combine(_combine(x, y), z)
+    right = _combine(x, _combine(y, z))
+    for l, r in zip(left, right):
+        np.testing.assert_allclose(np.asarray(l), np.asarray(r), rtol=1e-5, atol=1e-5)

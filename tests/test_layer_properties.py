@@ -1,0 +1,138 @@
+"""Mathematical properties of the shared layers (hypothesis)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.layers import (
+    apply_rope,
+    attention_dense,
+    layernorm_nonparam,
+    rmsnorm,
+)
+
+
+class TestRoPE:
+    @hypothesis.given(st.integers(0, 500), st.integers(1, 8))
+    @hypothesis.settings(max_examples=20, deadline=None)
+    def test_norm_preserving(self, pos, heads):
+        """Rotations preserve the per-head L2 norm."""
+        rng = np.random.default_rng(pos)
+        x = jnp.asarray(rng.normal(size=(1, 3, heads, 64)), jnp.float32)
+        positions = jnp.full((1, 3), pos)
+        y = apply_rope(x, positions, theta=1e4)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(x), axis=-1),
+            np.linalg.norm(np.asarray(y), axis=-1),
+            rtol=1e-5,
+        )
+
+    def test_relative_phase(self):
+        """<rope(q,m), rope(k,n)> depends only on m-n (the RoPE property)."""
+        rng = np.random.default_rng(0)
+        q = jnp.asarray(rng.normal(size=(1, 1, 1, 32)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(1, 1, 1, 32)), jnp.float32)
+
+        def dot_at(m, n):
+            qm = apply_rope(q, jnp.full((1, 1), m), theta=1e4)
+            kn = apply_rope(k, jnp.full((1, 1), n), theta=1e4)
+            return float(jnp.sum(qm * kn))
+
+        assert dot_at(5, 3) == pytest.approx(dot_at(105, 103), rel=1e-4)
+        assert dot_at(7, 0) == pytest.approx(dot_at(57, 50), rel=1e-4)
+
+    def test_position_zero_is_identity(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(2, 4, 2, 16)), jnp.float32)
+        y = apply_rope(x, jnp.zeros((2, 4), jnp.int32), theta=1e4)
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)
+
+
+class TestNorms:
+    @hypothesis.given(st.integers(0, 100))
+    @hypothesis.settings(max_examples=15, deadline=None)
+    def test_rmsnorm_unit_rms(self, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(4, 64)) * rng.uniform(0.1, 10), jnp.float32)
+        y = rmsnorm({"scale": jnp.ones(64)}, x, eps=1e-6)
+        rms = np.sqrt(np.mean(np.square(np.asarray(y)), axis=-1))
+        np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+    def test_rmsnorm_scale_invariance(self):
+        """rmsnorm(c·x) == rmsnorm(x) for c > 0."""
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.normal(size=(3, 32)), jnp.float32)
+        p = {"scale": jnp.ones(32)}
+        # equality is exact only as eps -> 0; tolerance covers eps=1e-5
+        np.testing.assert_allclose(
+            np.asarray(rmsnorm(p, x)), np.asarray(rmsnorm(p, 7.3 * x)),
+            atol=2e-4,
+        )
+
+    def test_layernorm_zero_mean_unit_var(self):
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.normal(size=(5, 128)) * 4 + 2, jnp.float32)
+        y = np.asarray(layernorm_nonparam(x, eps=1e-6))
+        np.testing.assert_allclose(y.mean(-1), 0.0, atol=1e-4)
+        np.testing.assert_allclose(y.var(-1), 1.0, rtol=1e-3)
+
+
+class TestAttentionProperties:
+    def test_permutation_equivariance_over_batch(self):
+        rng = np.random.default_rng(4)
+        q = jnp.asarray(rng.normal(size=(3, 8, 4, 16)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(3, 8, 2, 16)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(3, 8, 2, 16)), jnp.float32)
+        out = attention_dense(q, k, v, causal=True)
+        perm = jnp.asarray([2, 0, 1])
+        out_p = attention_dense(q[perm], k[perm], v[perm], causal=True)
+        np.testing.assert_allclose(
+            np.asarray(out[perm]), np.asarray(out_p), atol=1e-6
+        )
+
+    def test_causal_prefix_independence(self):
+        """Outputs at position t must not change when the suffix changes."""
+        rng = np.random.default_rng(5)
+        q = jnp.asarray(rng.normal(size=(1, 8, 2, 16)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(1, 8, 2, 16)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(1, 8, 2, 16)), jnp.float32)
+        out = attention_dense(q, k, v, causal=True)
+        k2 = k.at[:, 5:].set(0.0)
+        v2 = v.at[:, 5:].set(99.0)
+        out2 = attention_dense(q, k2, v2, causal=True)
+        np.testing.assert_allclose(
+            np.asarray(out[:, :5]), np.asarray(out2[:, :5]), atol=1e-6
+        )
+
+    def test_uniform_values_pass_through(self):
+        """If V is constant, attention output equals that constant."""
+        rng = np.random.default_rng(6)
+        q = jnp.asarray(rng.normal(size=(1, 6, 2, 8)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(1, 6, 2, 8)), jnp.float32)
+        v = jnp.ones((1, 6, 2, 8), jnp.float32) * 3.25
+        out = attention_dense(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), 3.25, rtol=1e-5)
+
+
+class TestEvaluatorProperty:
+    @hypothesis.given(
+        st.integers(1, 4), st.integers(1, 6), st.integers(0, 1000)
+    )
+    @hypothesis.settings(max_examples=15, deadline=None)
+    def test_lazy_matches_python_fold(self, cells, items, seed):
+        """For arbitrary affine cells, the evaluator == a python fold."""
+        from repro.core import LazyEvaluator, StreamProgram, evaluate
+
+        rng = np.random.default_rng(seed)
+        scales = rng.uniform(0.5, 1.5, size=cells).astype(np.float32)
+
+        def cell(state, item):
+            return state, item * state
+
+        prog = StreamProgram(cell, jnp.asarray(scales), cells)
+        xs = rng.normal(size=(items, 2)).astype(np.float32)
+        _, outs = evaluate(prog, jnp.asarray(xs), LazyEvaluator())
+        expect = xs * np.prod(scales)
+        np.testing.assert_allclose(np.asarray(outs), expect, rtol=1e-5)

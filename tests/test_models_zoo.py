@@ -1,0 +1,156 @@
+"""Per-arch smoke tests (reduced configs) + decode/prefill equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_config, smoke_config, all_cells
+from repro.models import transformer as T
+from repro.models.params import init_params, param_count
+
+
+def _inputs(sc, rng, B=2, S=16):
+    kw = {}
+    if sc.embeds_input:
+        kw["embeds"] = jax.random.normal(rng, (B, S, sc.d_model), jnp.float32)
+    else:
+        kw["tokens"] = jax.random.randint(rng, (B, S), 0, sc.vocab_size)
+    if sc.vision_tokens:
+        kw["vision_embeds"] = jax.random.normal(
+            rng, (B, sc.vision_tokens, sc.d_model), jnp.bfloat16
+        )
+    return kw
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward(arch, rng):
+    """Reduced config of the same family: one forward, shapes + no NaNs."""
+    sc = smoke_config(get_config(arch))
+    params = init_params(rng, T.model_layout(sc))
+    B, S = 2, 16
+    logits, _, aux = T.forward(params, sc, attn_impl="dense", **_inputs(sc, rng, B, S))
+    assert logits.shape == (B, S, sc.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    if sc.moe is not None:
+        assert float(aux["moe_lb_loss"]) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch, rng):
+    """One real optimizer step on the reduced config; finite loss + updates."""
+    from repro.train.optimizer import AdamWConfig, init_opt_state
+    from repro.train.train_step import TrainConfig, make_train_step
+
+    sc = smoke_config(get_config(arch))
+    params = init_params(rng, T.model_layout(sc))
+    opt = init_opt_state(params, AdamWConfig())
+    B, S = 2, 16
+    batch = dict(_inputs(sc, rng, B, S))
+    batch["labels"] = jax.random.randint(rng, (B, S), 0, sc.vocab_size)
+    if "tokens" not in batch and not sc.embeds_input:
+        batch["tokens"] = jax.random.randint(rng, (B, S), 0, sc.vocab_size)
+    step = make_train_step(
+        sc, TrainConfig(num_microbatches=2, attn_impl="dense", remat=True),
+        AdamWConfig(),
+    )
+    new_params, new_opt, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(new_opt["step"]) == 1
+    # at least one leaf changed
+    changed = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params))
+    )
+    assert changed
+
+
+@pytest.mark.parametrize(
+    "arch",
+    ["jamba-1.5-large-398b", "llama-3.2-vision-90b", "mamba2-1.3b",
+     "musicgen-medium", "qwen1.5-4b", "moonshot-v1-16b-a3b"],
+)
+def test_decode_matches_forward(arch, rng):
+    """Incremental decode with caches == full forward (all block types)."""
+    sc = smoke_config(get_config(arch))
+    params = init_params(rng, T.model_layout(sc))
+    B, S, MAX = 2, 8, 32
+    kw = _inputs(sc, rng, B, S)
+    logits_full, caches_ref, _ = T.forward(
+        params, sc, attn_impl="dense", collect_kv=True, cache_pad_to=MAX, **kw
+    )
+    cache = T.init_cache(sc, B, MAX)
+    if sc.vision_tokens:
+        for key in cache:
+            if cache[key]["k"].shape[2] == sc.vision_tokens:
+                cache[key] = caches_ref[key]
+    outs = []
+    for t in range(S):
+        dkw = {}
+        if sc.embeds_input:
+            dkw["embeds"] = kw["embeds"][:, t : t + 1]
+        else:
+            dkw["tokens"] = kw["tokens"][:, t]
+        lg, cache = T.decode_step(
+            params, cache, sc,
+            lengths=jnp.full((B,), t, jnp.int32), attn_impl="dense", **dkw
+        )
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    err = float(jnp.max(jnp.abs(dec - logits_full)))
+    assert err < 0.35, err  # bf16 params, fp32 logits
+
+
+def test_chunked_prefill_matches_forward(rng):
+    sc = smoke_config(get_config("qwen3-32b"))
+    params = init_params(rng, T.model_layout(sc))
+    B, S, CK = 2, 16, 4
+    tokens = jax.random.randint(rng, (B, S), 0, sc.vocab_size)
+    logits_full, _, _ = T.forward(params, sc, tokens=tokens, attn_impl="dense")
+    cache = T.init_cache(sc, B, S)
+    for c in range(S // CK):
+        lg, cache = T.prefill_step(
+            params, cache, sc,
+            tokens=tokens[:, c * CK : (c + 1) * CK], pos=c * CK,
+            attn_impl="dense",
+        )
+    err = float(jnp.max(jnp.abs(lg - logits_full[:, -1, :])))
+    assert err < 0.35, err
+
+
+def test_attention_impl_equivalence(rng):
+    """dense vs chunked lowerings agree (flash oracle chain)."""
+    sc = smoke_config(get_config("internlm2-20b"))
+    params = init_params(rng, T.model_layout(sc))
+    tokens = jax.random.randint(rng, (2, 32), 0, sc.vocab_size)
+    ld, _, _ = T.forward(params, sc, tokens=tokens, attn_impl="dense")
+    lc, _, _ = T.forward(
+        params, sc, tokens=tokens, attn_impl="chunked", q_chunk=8, kv_chunk=16
+    )
+    assert float(jnp.max(jnp.abs(ld - lc))) < 0.25
+
+
+def test_assigned_cells_cover_40_minus_skips():
+    cells = all_cells()
+    # 10 archs × 3 universal shapes + long_500k for the 2 sub-quadratic archs
+    assert len(cells) == 32
+    for arch, shape in cells:
+        assert shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+    longs = [a for a, s in cells if s == "long_500k"]
+    assert sorted(longs) == ["jamba-1.5-large-398b", "mamba2-1.3b"]
+
+
+def test_param_counts_match_names():
+    expected = {
+        "jamba-1.5-large-398b": (390e9, 410e9),
+        "qwen1.5-4b": (3.5e9, 4.5e9),
+        "olmo-1b": (1.0e9, 1.4e9),
+        "internlm2-20b": (18e9, 22e9),
+        "qwen3-32b": (30e9, 35e9),
+        "llama4-maverick-400b-a17b": (390e9, 410e9),
+        "llama-3.2-vision-90b": (80e9, 95e9),
+        "mamba2-1.3b": (1.1e9, 1.5e9),
+        "musicgen-medium": (1.3e9, 2.2e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = param_count(T.model_layout(get_config(arch)))
+        assert lo <= n <= hi, (arch, n)

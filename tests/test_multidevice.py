@@ -1,0 +1,139 @@
+"""Multi-device behaviour (FutureEvaluator pipelining, sharded train step).
+
+jax fixes the device count at first init, so these tests run a single
+subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=4 that
+executes a battery of checks and prints one line per check; the parent
+asserts on the report.  (The 512-device flag stays local to dryrun.py.)
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from functools import partial
+from repro.core import (FutureEvaluator, LazyEvaluator, StreamProgram,
+                        PipelineConfig, evaluate, pipeline_apply, split_stages)
+from repro.algorithms import sieve, polynomial as poly
+
+mesh = jax.make_mesh((4,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+fut = FutureEvaluator(mesh, "pod")
+
+# 1. evaluator equivalence with mutable state
+def cell(state, item):
+    return state + 1, item * 1.001 + state
+prog = StreamProgram(cell, jnp.arange(8, dtype=jnp.float32), 8)
+items = jnp.linspace(0, 1, 18).reshape(6, 3)
+sl, ol = evaluate(prog, items, LazyEvaluator())
+sf, of = evaluate(prog, items, fut)
+print("EQUIV", bool(jnp.allclose(sl, sf)) and bool(jnp.allclose(ol, of, atol=1e-6)))
+
+# 2. gradient equivalence through the pipeline (GPipe by autodiff)
+W = jax.random.normal(jax.random.PRNGKey(0), (8, 3, 3))
+def loss(W, ev):
+    p = StreamProgram(lambda w, x: (w, jnp.tanh(x @ w)), W, 8,
+                      mutable_state=False, remat=True)
+    return jnp.sum(evaluate(p, items, ev)[1] ** 2)
+g1 = jax.grad(lambda w: loss(w, LazyEvaluator()))(W)
+g2 = jax.grad(lambda w: loss(w, fut))(W)
+print("GRAD", bool(jnp.allclose(g1, g2, atol=1e-5)))
+
+# 3. pipeline_apply wrapper
+stage_params = split_stages(jax.random.normal(jax.random.PRNGKey(1), (8, 4, 4)), 8, 4)
+x = jax.random.normal(jax.random.PRNGKey(2), (8, 4))
+cfgp = PipelineConfig(num_stages=4, num_microbatches=4, axis_name="pod")
+def stage_fn(p, xb):
+    for i in range(p.shape[0]):
+        xb = jnp.tanh(xb @ p[i])
+    return xb
+y_lazy = pipeline_apply(stage_fn, stage_params, x, cfgp, mesh=None)
+y_pipe = pipeline_apply(stage_fn, stage_params, x, cfgp, mesh=mesh)
+print("PIPE", bool(jnp.allclose(y_lazy, y_pipe, atol=1e-6)))
+
+# 4. the paper's sieve under the Future monad
+ref = sieve.reference_primes(600)
+p4, c4 = sieve.run_sieve(600, block_size=64, primes_per_cell=2, num_cells=56,
+                         evaluator=fut)
+p4 = np.asarray(p4)
+print("SIEVE", int(c4) == len(ref) and np.array_equal(p4[p4 > 0], ref))
+
+# 5. polynomial multiplication under the Future monad
+x5 = poly.fateman_poly(3, 20, 6)
+ref5 = poly.reference_product(poly.to_dict(x5), poly.to_dict(x5))
+got5 = poly.to_dict(poly.times(x5, x5, evaluator=fut, num_x_chunks=4,
+                               terms_per_cell=5, acc_capacity=256))
+print("POLY", got5 == ref5)
+
+# 6. sharded train step on a 2x2 (data, model) mesh
+from repro.configs.registry import get_config, smoke_config
+from repro.models import transformer as T
+from repro.models.params import init_params
+from repro.parallel import sharding as SH
+from repro.train.optimizer import AdamWConfig, init_opt_state
+from repro.train.train_step import TrainConfig, make_train_step
+mesh2 = jax.make_mesh((2, 2), ("data", "model"),
+                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+sc = smoke_config(get_config("qwen3-32b"))
+layout = T.model_layout(sc)
+params = init_params(jax.random.PRNGKey(0), layout)
+opt = init_opt_state(params, AdamWConfig())
+tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, sc.vocab_size)
+batch = {"tokens": tokens, "labels": tokens}
+step = make_train_step(sc, TrainConfig(num_microbatches=2, attn_impl="dense"),
+                       AdamWConfig())
+ref_out = step(params, opt, batch)  # unsharded reference
+with jax.sharding.set_mesh(mesh2):
+    shardings = SH.param_shardings(layout, SH.TRAIN_RULES, mesh2)
+    params_s = jax.device_put(params, shardings)
+    opt_s = init_opt_state(params_s, AdamWConfig())
+    pspecs = SH.param_pspecs(layout, SH.TRAIN_RULES, mesh2)
+    step_s = make_train_step(sc, TrainConfig(num_microbatches=2, attn_impl="dense"),
+                             AdamWConfig(), param_pspecs=pspecs)
+    out_s = jax.jit(step_s)(params_s, opt_s, batch)
+ok = True
+for a, b in zip(jax.tree.leaves(ref_out[0]), jax.tree.leaves(out_s[0])):
+    ok &= bool(jnp.allclose(a.astype(jnp.float32), np.asarray(b, np.float32), atol=2e-2))
+print("SHARDED_TRAIN", ok, float(ref_out[2]["loss"]), float(out_s[2]["loss"]))
+"""
+
+
+@pytest.fixture(scope="module")
+def report():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return dict(
+        line.split(None, 1) for line in proc.stdout.strip().splitlines()
+    )
+
+
+def test_lazy_future_equivalence(report):
+    assert report["EQUIV"].startswith("True")
+
+
+def test_gradient_equivalence(report):
+    assert report["GRAD"].startswith("True")
+
+
+def test_pipeline_apply(report):
+    assert report["PIPE"].startswith("True")
+
+
+def test_sieve_future(report):
+    assert report["SIEVE"].startswith("True")
+
+
+def test_polynomial_future(report):
+    assert report["POLY"].startswith("True")
+
+
+def test_sharded_train_matches_unsharded(report):
+    assert report["SHARDED_TRAIN"].startswith("True")

@@ -1,0 +1,158 @@
+"""Core Stream/Future construct: semantics, chunking math, combinators."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Future,
+    LazyEvaluator,
+    StreamProgram,
+    bubble_fraction,
+    chunk_axis,
+    defer,
+    evaluate,
+    optimal_num_chunks,
+    pipeline_step_time,
+    unchunk_axis,
+)
+from repro.core.future import HostFuture
+
+
+def _counting_program(num_cells):
+    def cell(state, item):
+        return state + 1, item * 1.5 + state.astype(jnp.float32)
+
+    return StreamProgram(cell, jnp.arange(num_cells, dtype=jnp.int32), num_cells)
+
+
+class TestLazyEvaluator:
+    def test_matches_python_reference(self):
+        prog = _counting_program(3)
+        items = jnp.asarray([[1.0], [2.0]])
+        states, outs = evaluate(prog, items, LazyEvaluator())
+        # python reference with the same ordering semantics
+        st_ref = np.arange(3, dtype=np.int64)
+        outs_ref = []
+        for it in [1.0, 2.0]:
+            flow = it
+            for s in range(3):
+                flow = flow * 1.5 + st_ref[s]
+                st_ref[s] += 1
+            outs_ref.append(flow)
+        np.testing.assert_array_equal(np.asarray(states), st_ref)
+        np.testing.assert_allclose(np.asarray(outs)[:, 0], outs_ref, rtol=1e-6)
+
+    def test_state_mutation_order(self):
+        # each cell counts items seen: all cells see all items
+        prog = _counting_program(4)
+        items = jnp.ones((5, 1))
+        states, _ = evaluate(prog, items)
+        np.testing.assert_array_equal(
+            np.asarray(states), np.arange(4) + 5
+        )
+
+    def test_immutable_state(self):
+        def cell(w, x):
+            return w + 1, x * w
+
+        prog = StreamProgram(cell, jnp.ones(2), 2, mutable_state=False)
+        states, outs = evaluate(prog, jnp.ones((3, 1)))
+        np.testing.assert_array_equal(np.asarray(states), np.ones(2))
+
+    def test_bad_state_shape_raises(self):
+        with pytest.raises(ValueError):
+            StreamProgram(lambda s, x: (s, x), jnp.zeros((3,)), 4)
+
+
+class TestChunking:
+    @hypothesis.given(
+        st.integers(min_value=1, max_value=64),
+        st.integers(min_value=1, max_value=64),
+    )
+    @hypothesis.settings(max_examples=30, deadline=None)
+    def test_bubble_fraction_bounds(self, s, m):
+        frac = bubble_fraction(s, m)
+        assert 0.0 <= frac < 1.0
+        if s == 1:
+            assert frac == 0.0
+
+    @hypothesis.given(
+        st.floats(min_value=1e-3, max_value=10.0),
+        st.integers(min_value=2, max_value=32),
+        st.floats(min_value=1e-6, max_value=1e-1),
+    )
+    @hypothesis.settings(max_examples=30, deadline=None)
+    def test_optimal_chunks_is_argmin(self, work, stages, overhead):
+        m_star = optimal_num_chunks(work, stages, overhead)
+        t_star = pipeline_step_time(work, stages, m_star, overhead)
+        for m in {max(1, m_star // 2), m_star * 2, 1, 4096}:
+            assert t_star <= pipeline_step_time(work, stages, m, overhead) * 1.0001
+
+    def test_paper_primes_regime(self):
+        # fine-grained cells (overhead >> work/cell): don't pipeline
+        assert optimal_num_chunks(1e-4, 8, 1e-2) == 1
+
+    def test_chunk_roundtrip(self):
+        tree = {"a": jnp.arange(24).reshape(12, 2), "b": jnp.arange(12)}
+        again = unchunk_axis(chunk_axis(tree, 4))
+        for k in tree:
+            np.testing.assert_array_equal(np.asarray(tree[k]), np.asarray(again[k]))
+
+    def test_chunk_indivisible_raises(self):
+        with pytest.raises(ValueError):
+            chunk_axis(jnp.arange(10), 3)
+
+
+class TestFutureCombinators:
+    def test_defer_force_identity(self):
+        fut = defer(lambda: jnp.arange(3.0))
+        np.testing.assert_array_equal(np.asarray(fut.force()), [0, 1, 2])
+
+    def test_map_forwards_laziness(self):
+        fut = defer(lambda: jnp.asarray(2.0)).map(lambda v: v * 3)
+        assert float(fut.force()) == 6.0
+
+    def test_force_with_anchor_inside_jit(self):
+        def f(x):
+            fut = defer(jnp.sin, x)
+            anchor = jnp.cos(x)  # work to overlap
+            return fut.force(anchor=anchor) + anchor
+
+        x = jnp.asarray(0.7)
+        assert jnp.allclose(jax.jit(f)(x), jnp.sin(x) + jnp.cos(x))
+
+    def test_host_future(self):
+        fut = HostFuture(lambda: 41).map(lambda v: v + 1)
+        assert fut.force() == 42
+
+
+class TestStreamProgramJit:
+    def test_evaluate_inside_jit(self):
+        prog = _counting_program(4)
+        items = jnp.ones((3, 2))
+
+        @jax.jit
+        def run(items):
+            return evaluate(prog, items)[1]
+
+        np.testing.assert_allclose(
+            np.asarray(run(items)), np.asarray(evaluate(prog, items)[1])
+        )
+
+    def test_grad_through_lazy(self):
+        def cell(w, x):
+            return w, jnp.tanh(x * w)
+
+        w = jnp.full((3,), 0.5)
+        prog_fn = lambda w: StreamProgram(cell, w, 3, mutable_state=False)
+
+        def loss(w):
+            _, outs = evaluate(prog_fn(w), jnp.ones((2, 1)))
+            return jnp.sum(outs)
+
+        g = jax.grad(loss)(w)
+        assert g.shape == (3,)
+        assert bool(jnp.all(jnp.isfinite(g)))

@@ -1,0 +1,231 @@
+"""Optimizer, checkpointing, fault tolerance, data pipeline, compression."""
+import os
+import time
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import DataConfig, PrefetchIterator, make_source, host_shard
+from repro.train import compression
+from repro.train.checkpoint import Checkpointer
+from repro.train.fault import FaultConfig, ResilientLoop
+from repro.train.optimizer import (
+    AdamWConfig,
+    adamw_update,
+    global_norm,
+    init_opt_state,
+    lr_schedule,
+)
+
+
+class TestOptimizer:
+    def _numpy_adamw(self, p, g, m, v, step, cfg):
+        gnorm = np.sqrt(sum(np.sum(np.square(x)) for x in g.values()))
+        scale = min(1.0, cfg.clip_norm / max(gnorm, 1e-9))
+        lr = float(lr_schedule(jnp.asarray(step), cfg))
+        out_p, out_m, out_v = {}, {}, {}
+        for k in p:
+            gg = g[k] * scale
+            out_m[k] = cfg.beta1 * m[k] + (1 - cfg.beta1) * gg
+            out_v[k] = cfg.beta2 * v[k] + (1 - cfg.beta2) * gg * gg
+            mh = out_m[k] / (1 - cfg.beta1**step)
+            vh = out_v[k] / (1 - cfg.beta2**step)
+            upd = mh / (np.sqrt(vh) + cfg.eps) + cfg.weight_decay * p[k]
+            out_p[k] = p[k] - lr * upd
+        return out_p, out_m, out_v
+
+    def test_matches_numpy_reference(self):
+        rng = np.random.default_rng(0)
+        cfg = AdamWConfig(learning_rate=1e-2, warmup_steps=0)
+        p = {"a": rng.normal(size=(4, 3)).astype(np.float32),
+             "b": rng.normal(size=(5,)).astype(np.float32)}
+        g = {k: rng.normal(size=v.shape).astype(np.float32) for k, v in p.items()}
+        params = jax.tree.map(jnp.asarray, p)
+        opt = init_opt_state(params, cfg)
+        new_p, new_opt, metrics = adamw_update(params, jax.tree.map(jnp.asarray, g), opt, cfg)
+        ref_p, ref_m, ref_v = self._numpy_adamw(
+            p, g, {k: np.zeros_like(v) for k, v in p.items()},
+            {k: np.zeros_like(v) for k, v in p.items()}, 1, cfg,
+        )
+        for k in p:
+            np.testing.assert_allclose(np.asarray(new_p[k]), ref_p[k], rtol=2e-5, atol=1e-6)
+            np.testing.assert_allclose(np.asarray(new_opt["m"][k]), ref_m[k], rtol=2e-5, atol=1e-6)
+
+    def test_clip_caps_update(self):
+        cfg = AdamWConfig(clip_norm=1e-3, weight_decay=0.0, warmup_steps=0)
+        params = {"w": jnp.ones((8,))}
+        grads = {"w": jnp.full((8,), 100.0)}
+        opt = init_opt_state(params, cfg)
+        _, _, metrics = adamw_update(params, grads, opt, cfg)
+        assert float(metrics["grad_norm"]) > 100
+
+    def test_bf16_moments_roundtrip(self):
+        cfg = AdamWConfig(moment_dtype=jnp.bfloat16)
+        params = {"w": jnp.ones((4,))}
+        opt = init_opt_state(params, cfg)
+        assert opt["m"]["w"].dtype == jnp.bfloat16
+        new_p, new_opt, _ = adamw_update(params, {"w": jnp.ones((4,)) * 0.1}, opt, cfg)
+        assert new_opt["v"]["w"].dtype == jnp.bfloat16
+        assert bool(jnp.all(jnp.isfinite(new_p["w"])))
+
+    def test_lr_schedule_shape(self):
+        cfg = AdamWConfig(learning_rate=1.0, warmup_steps=10, total_steps=100)
+        lrs = [float(lr_schedule(jnp.asarray(s), cfg)) for s in [0, 5, 10, 100]]
+        assert lrs[0] == 0.0
+        assert abs(lrs[1] - 0.5) < 1e-6
+        assert lrs[2] == pytest.approx(1.0, abs=1e-2)
+        assert lrs[3] == pytest.approx(cfg.min_lr_ratio, abs=1e-2)
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        ckpt = Checkpointer(str(tmp_path), keep=2)
+        state = {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+                 "opt_state": {"step": jnp.asarray(7)}}
+        ckpt.save(7, state, blocking=True)
+        restored, step = ckpt.restore(state)
+        assert step == 7
+        np.testing.assert_array_equal(
+            np.asarray(restored["params"]["w"]), np.asarray(state["params"]["w"])
+        )
+
+    def test_gc_keeps_last_k(self, tmp_path):
+        ckpt = Checkpointer(str(tmp_path), keep=2)
+        state = {"x": jnp.zeros(2)}
+        for s in (1, 2, 3, 4):
+            ckpt.save(s, state, blocking=True)
+        assert ckpt.all_steps() == [3, 4]
+
+    def test_async_write_overlaps(self, tmp_path):
+        ckpt = Checkpointer(str(tmp_path))
+        state = {"x": jnp.zeros((256, 256))}
+        ckpt.save(1, state)  # non-blocking
+        ckpt.wait()
+        assert ckpt.latest_step() == 1
+
+    def test_atomicity_no_partial_dirs(self, tmp_path):
+        ckpt = Checkpointer(str(tmp_path))
+        ckpt.save(3, {"x": jnp.ones(4)}, blocking=True)
+        names = os.listdir(tmp_path)
+        assert all(not n.endswith(".tmp0") for n in names)
+
+
+class TestFaultTolerance:
+    def _mini_step(self):
+        def step(params, opt, batch):
+            params = {"w": params["w"] - 0.1 * batch["g"]}
+            return params, opt, {"loss": jnp.sum(params["w"] ** 2)}
+        return step
+
+    def test_restart_recovers_and_replays(self, tmp_path):
+        ckpt = Checkpointer(str(tmp_path))
+        loop = ResilientLoop(
+            self._mini_step(), ckpt,
+            FaultConfig(checkpoint_every=2, max_restarts=2),
+        )
+        crashed = {"done": False}
+
+        def injector(step):
+            if step == 3 and not crashed["done"]:
+                crashed["done"] = True
+                raise RuntimeError("simulated node failure")
+
+        params, _, step, history = loop.run(
+            {"w": jnp.ones(2)}, {}, lambda s: {"g": jnp.ones(2)},
+            num_steps=5, fail_injector=injector,
+        )
+        assert step == 5
+        assert loop.stats["restarts"] == 1
+        # deterministic data → same final state as a clean run
+        clean = ResilientLoop(self._mini_step(), Checkpointer(str(tmp_path) + "2"),
+                              FaultConfig(checkpoint_every=100))
+        params_clean, _, _, _ = clean.run(
+            {"w": jnp.ones(2)}, {}, lambda s: {"g": jnp.ones(2)}, num_steps=5
+        )
+        np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(params_clean["w"]))
+
+    def test_straggler_detection(self, tmp_path):
+        seen = []
+        loop = ResilientLoop(
+            self._mini_step(), Checkpointer(str(tmp_path)),
+            FaultConfig(straggler_factor=1.5),
+            on_straggler=lambda s, ratio: seen.append((s, ratio)),
+        )
+        # manually feed step times
+        loop._track_time(0, 0.1)
+        loop._track_time(1, 0.1)
+        loop._track_time(2, 1.0)  # straggler
+        assert loop.stats["stragglers"] == 1 and seen[0][0] == 2
+
+    def test_heartbeat_written(self, tmp_path):
+        hb = str(tmp_path / "hb")
+        loop = ResilientLoop(
+            self._mini_step(), Checkpointer(str(tmp_path / "c")),
+            FaultConfig(heartbeat_path=hb, checkpoint_every=100),
+        )
+        loop.run({"w": jnp.ones(2)}, {}, lambda s: {"g": jnp.ones(2)}, num_steps=2)
+        assert os.path.exists(hb)
+
+
+class TestDataPipeline:
+    def test_step_keyed_determinism(self):
+        cfg = DataConfig(seq_len=16, global_batch=4, seed=3)
+        src = make_source(cfg)
+        b1, b2 = src.batch(5), src.batch(5)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        b3 = src.batch(6)
+        assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+    def test_labels_are_shifted_tokens(self):
+        cfg = DataConfig(seq_len=16, global_batch=2)
+        b = make_source(cfg).batch(0)
+        assert b["tokens"].shape == b["labels"].shape == (2, 16)
+
+    def test_prefetch_iterator_order_and_seek(self):
+        cfg = DataConfig(seq_len=8, global_batch=2)
+        src = make_source(cfg)
+        it = PrefetchIterator(src, start_step=0, depth=2)
+        first = next(it)
+        np.testing.assert_array_equal(first["tokens"], src.batch(0)["tokens"])
+        it.seek(10)
+        np.testing.assert_array_equal(next(it)["tokens"], src.batch(10)["tokens"])
+
+    def test_host_shard_slices_rows(self):
+        batch = {"tokens": np.arange(32).reshape(8, 4)}
+        shard = host_shard(batch, process_index=1, process_count=2)
+        np.testing.assert_array_equal(shard["tokens"], batch["tokens"][4:])
+
+    def test_file_source(self, tmp_path):
+        path = str(tmp_path / "toks.bin")
+        np.arange(10000, dtype=np.uint16).tofile(path)
+        cfg = DataConfig(seq_len=8, global_batch=2, kind="file", path=path)
+        b = make_source(cfg).batch(1)
+        assert b["tokens"].shape == (2, 8)
+        np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+
+
+class TestCompression:
+    @hypothesis.given(st.integers(0, 2**31 - 1))
+    @hypothesis.settings(max_examples=10, deadline=None)
+    def test_error_feedback_preserves_sum(self, seed):
+        """Over many steps, Σ compressed ≈ Σ true gradients (EF property)."""
+        rng = np.random.default_rng(seed)
+        grads = [rng.normal(size=(64,)).astype(np.float32) * 1e-3 for _ in range(30)]
+        err = None
+        total_q = np.zeros(64, np.float64)
+        for g in grads:
+            q, err = compression.compress_decompress({"g": jnp.asarray(g)}, err)
+            total_q += np.asarray(q["g"], np.float64)
+        total = np.sum(grads, axis=0)
+        residual = np.asarray(err["g"])
+        np.testing.assert_allclose(total_q + residual, total, atol=1e-5)
+
+    def test_compression_is_bf16_quantized(self):
+        g = {"g": jnp.asarray([1.0 + 1e-4])}
+        q, err = compression.compress_decompress(g, None)
+        assert float(q["g"][0]) != float(g["g"][0])  # rounding happened
+        assert abs(float(q["g"][0] + err["g"][0]) - float(g["g"][0])) < 1e-9
