@@ -39,6 +39,7 @@ def run_with_devices(script: str, num_devices: int, timeout: int = 1200) -> str:
     proc = subprocess.run(
         [sys.executable, "-c", script],
         capture_output=True, text=True, env=env, timeout=timeout,
+        stdin=subprocess.DEVNULL,
     )
     if proc.returncode != 0:
         raise RuntimeError(proc.stderr[-2000:])

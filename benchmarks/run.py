@@ -5,10 +5,16 @@
 Prints ``name,us_per_call,derived`` CSV.  quick mode (default) shrinks
 problem sizes so the suite completes in minutes on one CPU core; --full
 uses the paper's sizes (Table 1: primes to 20000/60000, Fateman ^20).
+
+The pipeline suite additionally persists its (schedule x M) sweep —
+modeled vs measured — to ``BENCH_pipeline.json`` at the repo root, the
+perf-trajectory baseline future PRs diff against.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import traceback
 
@@ -44,11 +50,24 @@ def main() -> None:
             for row in rows:
                 print(row)
             sys.stdout.flush()
+            if name == "pipeline":
+                _write_pipeline_baseline(getattr(SUITES[name].run, "records", []))
         except Exception as e:  # noqa: BLE001
             failed.append((name, e))
             traceback.print_exc()
     if failed:
         raise SystemExit(f"benchmark suites failed: {[n for n, _ in failed]}")
+
+
+def _write_pipeline_baseline(records: list) -> None:
+    if not records:
+        return
+    path = os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_pipeline.json"
+    )
+    with open(os.path.normpath(path), "w") as f:
+        json.dump({"sweep": records}, f, indent=2)
+    print(f"# wrote {os.path.normpath(path)}", file=sys.stderr)
 
 
 if __name__ == "__main__":

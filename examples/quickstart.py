@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.core import (
     FutureEvaluator,
     LazyEvaluator,
@@ -43,9 +44,9 @@ def main():
     print("lazy:   outs[0] =", np.asarray(outs[0]))
 
     if jax.device_count() >= 2 and num_cells % jax.device_count() == 0:
-        mesh = jax.make_mesh(
+        mesh = compat.make_mesh(
             (jax.device_count(),), ("pod",),
-            axis_types=(jax.sharding.AxisType.Auto,),
+            axis_types=(compat.AxisType.Auto,),
         )
         (_, counts_f), outs_f = evaluate(
             program, items, FutureEvaluator(mesh, "pod")

@@ -1,0 +1,229 @@
+"""Version shims: one module owns every JAX-API fork in the repo.
+
+The codebase is written against the modern JAX surface (``jax.shard_map``
+with ``axis_names``, ``jax.sharding.AxisType``, ``lax.pcast`` vma casts,
+``jax.sharding.set_mesh``/``get_abstract_mesh``, differentiable
+``optimization_barrier``).  The pinned container ships JAX 0.4.37, where
+each of those is missing or spelled differently.  Every call site routes
+through here so the rest of the tree stays single-idiom:
+
+========================  =============================  ====================
+modern (>= 0.5/0.8)       0.4.x fallback                 shim
+========================  =============================  ====================
+jax.sharding.AxisType     (absent)                       enum stand-in
+jax.make_mesh(axis_types) jax.make_mesh (no kwarg)       kwarg dropped
+jax.shard_map(axis_names) jax.experimental.shard_map     manual set -> auto=
+                          (auto=, check_rep=)            complement
+lax.pcast                 (absent; no vma types)         identity
+jax.sharding.set_mesh     ``with mesh:`` context         context manager
+get_abstract_mesh         thread_resources physical mesh getter
+optimization_barrier AD   NotImplementedError            custom_vjp wrapper
+========================  =============================  ====================
+
+Nothing here imports anything outside jax, so it is safe to import first.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import enum
+from typing import Any, Iterable
+
+import jax
+from jax import lax
+
+PyTree = Any
+
+# Manual axes of the shard_map region currently being traced (0.4.x has
+# no mesh.axis_types to read them from; the shim records them instead).
+_MANUAL_AXES: contextvars.ContextVar[frozenset] = contextvars.ContextVar(
+    "repro_manual_axes", default=frozenset()
+)
+
+
+# ---------------------------------------------------------------------------
+# AxisType / make_mesh
+# ---------------------------------------------------------------------------
+
+if hasattr(jax.sharding, "AxisType"):
+    AxisType = jax.sharding.AxisType
+else:
+
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        """Stand-in for jax.sharding.AxisType (absent in 0.4.x).
+
+        0.4.x meshes are implicitly all-Auto; the enum exists so call
+        sites can still *name* the intent and so ``manual_axis_names``
+        has something to compare against on newer JAX.
+        """
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+def make_mesh(
+    axis_shapes: tuple[int, ...],
+    axis_names: tuple[str, ...],
+    *,
+    axis_types: tuple[Any, ...] | None = None,
+    devices=None,
+) -> jax.sharding.Mesh:
+    """jax.make_mesh that tolerates the missing ``axis_types`` kwarg."""
+    try:
+        return jax.make_mesh(
+            axis_shapes, axis_names, axis_types=axis_types, devices=devices
+        )
+    except TypeError:
+        return jax.make_mesh(axis_shapes, axis_names, devices=devices)
+
+
+# ---------------------------------------------------------------------------
+# shard_map (partial-manual spelling)
+# ---------------------------------------------------------------------------
+
+
+def shard_map(
+    f,
+    *,
+    mesh: jax.sharding.Mesh,
+    in_specs,
+    out_specs,
+    axis_names: Iterable[str] | None = None,
+):
+    """Partial-manual shard_map across JAX versions.
+
+    ``axis_names`` is the *manual* set (modern spelling).  On 0.4.x it is
+    translated to the experimental API's ``auto=`` complement, with
+    ``check_rep=False`` (the 0.4.x rep checker rejects the ppermute ring
+    + axis_index control flow the pipeline engine uses, and lacks
+    transpose rules for some rep-checked collectives under grad).
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return jax.shard_map(f, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    manual = (
+        frozenset(mesh.axis_names)
+        if axis_names is None
+        else frozenset(axis_names)
+    )
+    auto = frozenset(mesh.axis_names) - manual
+
+    def traced(*args, **kw):
+        # Record the manual set while the body traces so
+        # manual_axis_names() (hence sharding.maybe_constrain) can drop
+        # manual axes from activation specs — 0.4.x's replacement for
+        # reading AxisType.Manual off the abstract mesh.
+        token = _MANUAL_AXES.set(_MANUAL_AXES.get() | manual)
+        try:
+            return f(*args, **kw)
+        finally:
+            _MANUAL_AXES.reset(token)
+
+    return _shard_map(
+        traced,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        check_rep=False,
+        auto=auto,
+    )
+
+
+def pcast(x, axis_names, *, to: str = "varying"):
+    """lax.pcast on JAX that has varying-manual-axes types; identity before."""
+    if hasattr(lax, "pcast"):
+        return lax.pcast(x, tuple(axis_names), to=to)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Mesh context / introspection
+# ---------------------------------------------------------------------------
+
+
+@contextlib.contextmanager
+def set_mesh(mesh: jax.sharding.Mesh):
+    """jax.sharding.set_mesh, or the legacy ``with mesh:`` context."""
+    if hasattr(jax.sharding, "set_mesh"):
+        with jax.sharding.set_mesh(mesh):
+            yield mesh
+    else:
+        with mesh:
+            yield mesh
+
+
+def get_abstract_mesh():
+    """Mesh currently in scope, or None.
+
+    Modern JAX: the abstract mesh.  0.4.x: the physical mesh installed by
+    ``with mesh:`` (empty mesh when none), which exposes the same
+    ``.empty`` / ``.axis_names`` / ``.shape`` surface the callers use.
+    """
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    from jax._src import mesh as mesh_lib
+
+    return mesh_lib.thread_resources.env.physical_mesh
+
+
+def manual_axis_names(mesh) -> frozenset[str]:
+    """Names of Manual axes in scope: the mesh's own (modern JAX) plus any
+    recorded by a 0.4.x partial-manual shard_map being traced."""
+    types = getattr(mesh, "axis_types", None)
+    if types is None:
+        own = frozenset()
+    elif isinstance(types, dict):  # some versions: {AxisType: names}
+        manual = types.get(AxisType.Manual, ())
+        own = frozenset((manual,) if isinstance(manual, str) else manual)
+    else:
+        own = frozenset(
+            name
+            for name, kind in zip(mesh.axis_names, types)
+            if kind == AxisType.Manual
+        )
+    return own | _MANUAL_AXES.get()
+
+
+# ---------------------------------------------------------------------------
+# Differentiable optimization_barrier
+# ---------------------------------------------------------------------------
+
+# Trace-only probe (eval_shape): detects the missing 0.4.x AD rule
+# without executing anything — importing repro must never initialize a
+# backend or lock in the platform before the caller sets XLA_FLAGS.
+try:
+    jax.eval_shape(
+        jax.grad(lambda x: lax.optimization_barrier((x,))[0]),
+        jax.ShapeDtypeStruct((), "float32"),
+    )
+    _BARRIER_DIFFERENTIABLE = True
+except Exception:  # noqa: BLE001  (0.4.x: NotImplementedError)
+    _BARRIER_DIFFERENTIABLE = False
+
+
+if _BARRIER_DIFFERENTIABLE:
+    optimization_barrier = lax.optimization_barrier
+else:
+
+    @jax.custom_vjp
+    def optimization_barrier(xs: tuple):
+        """lax.optimization_barrier with an AD rule (absent in 0.4.x).
+
+        Backward applies its own barrier to the cotangents: the reversed
+        pipeline gets the same issue-early/force-late scheduling edge as
+        the forward one.
+        """
+        return lax.optimization_barrier(xs)
+
+    def _ob_fwd(xs):
+        return lax.optimization_barrier(xs), None
+
+    def _ob_bwd(_, cts):
+        return (lax.optimization_barrier(cts),)
+
+    optimization_barrier.defvjp(_ob_fwd, _ob_bwd)

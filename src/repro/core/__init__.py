@@ -3,17 +3,25 @@
 Public API:
   StreamProgram, LazyEvaluator, FutureEvaluator, evaluate
   Future, defer, HostFuture, collective futures
-  ChunkPolicy, bubble_fraction, optimal_num_chunks
+  SchedulePlan, build_plan (the schedule zoo: gpipe / one_f_one_b /
+  interleaved)
+  ChunkPolicy, bubble_fraction, optimal_num_chunks, optimal_schedule
   PipelineConfig, pipeline_apply
 """
 from repro.core.chunking import (
     ChunkPolicy,
+    ScheduleChoice,
     bubble_fraction,
     chunk_axis,
     optimal_num_chunks,
+    optimal_schedule,
     pipeline_step_time,
+    schedule_bubble_fraction,
+    schedule_peak_items,
+    schedule_ticks,
     unchunk_axis,
 )
+from repro.core.schedules import SCHEDULES, SchedulePlan, build_plan
 from repro.core.future import (
     Future,
     HostFuture,
@@ -42,18 +50,26 @@ __all__ = [
     "HostFuture",
     "LazyEvaluator",
     "PipelineConfig",
+    "SCHEDULES",
+    "ScheduleChoice",
+    "SchedulePlan",
     "StreamProgram",
     "all_gather_future",
     "bubble_fraction",
+    "build_plan",
     "chunk_axis",
     "defer",
     "evaluate",
     "merge_stages",
     "optimal_num_chunks",
+    "optimal_schedule",
     "pipeline_apply",
     "pipeline_step_time",
     "ppermute_future",
     "psum_scatter_future",
+    "schedule_bubble_fraction",
+    "schedule_peak_items",
+    "schedule_ticks",
     "split_stages",
     "unchunk_axis",
 ]

@@ -16,6 +16,18 @@ pipeline the trade-off is exact:
 ``optimal_num_chunks`` minimizes the modeled step time; it reproduces the
 paper's qualitative finding (their ``primes`` cells were far below the
 break-even size) and quantifies it.
+
+The model is schedule-aware (see :mod:`repro.core.schedules`): tick
+counts, bubble fractions and peak in-flight memory are parameterized by
+(schedule, interleave, handoff), and :func:`optimal_schedule` picks the
+(schedule, M, V) triple jointly under an optional memory budget.  The
+closed-form tick count
+
+    T = (V - 1) * max(M, h*S) + M + h*(S - 1)
+
+is exact against the greedy plans ``schedules.build_plan`` emits (tested
+over the full grid); ``h`` is the hand-off latency — 1 for a textbook
+synchronous pipeline, 2 for the evaluator's issue-early/force-late ring.
 """
 from __future__ import annotations
 
@@ -25,6 +37,12 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.core.schedules import (
+    DEFAULT_HANDOFF,
+    peak_inflight_items,
+    validate_schedule,
+)
+
 
 def bubble_fraction(num_stages: int, num_chunks: int) -> float:
     """Fill/drain bubble fraction of a linear pipeline (GPipe forward)."""
@@ -33,20 +51,78 @@ def bubble_fraction(num_stages: int, num_chunks: int) -> float:
     return (num_stages - 1) / (num_chunks + num_stages - 1)
 
 
+def schedule_ticks(
+    schedule: str,
+    num_stages: int,
+    num_chunks: int,
+    interleave: int = 1,
+    handoff: int = DEFAULT_HANDOFF,
+) -> int:
+    """Tick count of ``schedule`` — matches ``build_plan(...).num_ticks``.
+
+    ``num_stages`` is the *device* count S of the pipeline axis; the
+    interleaved schedule runs S*V virtual stages.  Exact for S >= 2 (and
+    for V == 1 always); the degenerate S == 1, V > 1 self-ring is not
+    modeled.
+    """
+    v = validate_schedule(schedule, interleave)
+    s, m, h = num_stages, num_chunks, handoff
+    if s <= 1:
+        return v * m
+    return (v - 1) * max(m, h * s) + m + h * (s - 1)
+
+
+def schedule_bubble_fraction(
+    schedule: str,
+    num_stages: int,
+    num_chunks: int,
+    interleave: int = 1,
+    handoff: int = DEFAULT_HANDOFF,
+) -> float:
+    """Idle fraction of the (ticks x stages) grid under ``schedule``.
+
+    Interleaving divides per-tick work by V while fill/drain stays
+    ``h*(S-1)`` ticks, so the bubble falls from ``h(S-1)/(M + h(S-1))``
+    to ``h(S-1)/(V*M + h(S-1))`` — the engine's reason to exist.
+    """
+    v = validate_schedule(schedule, interleave)
+    if num_stages <= 1:
+        return 0.0
+    ticks = schedule_ticks(schedule, num_stages, num_chunks, interleave, handoff)
+    return 1.0 - (v * num_chunks) / ticks
+
+
+def schedule_peak_items(
+    schedule: str, num_stages: int, num_chunks: int, interleave: int = 1
+) -> int:
+    """Peak per-device activation stash (in microbatches) under autodiff
+    training — the schedule's memory term (delegates to the single
+    definition in :mod:`repro.core.schedules`)."""
+    return peak_inflight_items(schedule, num_stages, num_chunks, interleave)
+
+
 def pipeline_step_time(
     work_per_item: float,
     num_stages: int,
     num_chunks: int,
     per_tick_overhead: float,
+    schedule: str = "gpipe",
+    interleave: int = 1,
+    handoff: int = 1,
 ) -> float:
     """Modeled wall time of pipelining `work_per_item` split into chunks.
 
     ``work_per_item`` is the total serial compute time of one full item
-    through all stages; each of the (M + S - 1) ticks costs the slowest
-    stage's chunk compute (work / (S*M)) plus a fixed overhead.
+    through all stages; each tick costs the slowest stage's group compute
+    (``work / (S*M*V)``) plus a fixed overhead.  The default
+    (gpipe, V=1, h=1) reproduces the classic ``(M+S-1)(W/(S M) + c)``;
+    pass ``handoff=schedules.DEFAULT_HANDOFF`` to model the Future
+    engine's overlapped ring (whose per-tick overhead is what is left
+    after the permute hides under the cell scan).
     """
-    ticks = num_chunks + num_stages - 1
-    per_tick_compute = work_per_item / (num_stages * num_chunks)
+    v = validate_schedule(schedule, interleave)
+    ticks = schedule_ticks(schedule, num_stages, num_chunks, interleave, handoff)
+    per_tick_compute = work_per_item / (num_stages * num_chunks * v)
     return ticks * (per_tick_compute + per_tick_overhead)
 
 
@@ -55,20 +131,136 @@ def optimal_num_chunks(
     num_stages: int,
     per_tick_overhead: float,
     max_chunks: int = 4096,
+    schedule: str = "gpipe",
+    interleave: int = 1,
+    handoff: int = 1,
 ) -> int:
     """Minimize modeled step time over the number of chunks M.
 
-    Closed form of d/dM [ (M+S-1)(W/(S·M) + c) ] = 0:
-        M* = sqrt( W (S-1) / (S c) )
-    clipped to [1, max_chunks].  When overhead dominates (paper's primes
-    case) M* -> 1: don't pipeline fine-grained work.
+    Closed form of d/dM [ (VM + h(S-1))(W/(S·M·V) + c) ] = 0:
+        M* = sqrt( h W (S-1) / (S c) ) / V
+    (gpipe, h=1 reduces to the paper-era ``sqrt(W(S-1)/(S c))``),
+    refined by evaluating integer neighbors so the kink at M = h*S in
+    the interleaved tick count is respected.  Clipped to
+    [1, max_chunks].  When overhead dominates (paper's primes case)
+    M* -> 1: don't pipeline fine-grained work.
     """
+    v = validate_schedule(schedule, interleave)
     if num_stages <= 1 or per_tick_overhead <= 0:
         return max_chunks
-    m_star = math.sqrt(
-        work_per_item * (num_stages - 1) / (num_stages * per_tick_overhead)
+    m_star = (
+        math.sqrt(
+            handoff
+            * work_per_item
+            * (num_stages - 1)
+            / (num_stages * per_tick_overhead)
+        )
+        / v
     )
-    return max(1, min(max_chunks, round(m_star)))
+    candidates = {
+        max(1, min(max_chunks, m))
+        for m in (
+            math.floor(m_star),
+            math.ceil(m_star),
+            handoff * num_stages,
+            1,
+            max_chunks,
+        )
+        if m >= 1
+    }
+    return min(
+        candidates,
+        key=lambda m: (
+            pipeline_step_time(
+                work_per_item,
+                num_stages,
+                m,
+                per_tick_overhead,
+                schedule,
+                interleave,
+                handoff,
+            ),
+            m,
+        ),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleChoice:
+    """Joint (schedule, M, V) decision from :func:`optimal_schedule`."""
+
+    schedule: str
+    num_chunks: int
+    interleave: int
+    modeled_time: float
+    bubble: float
+    peak_items: int
+
+
+def optimal_schedule(
+    work_per_item: float,
+    num_stages: int,
+    per_tick_overhead: float,
+    *,
+    max_chunks: int = 4096,
+    interleave_options: tuple[int, ...] = (1, 2, 4),
+    memory_budget_items: float | None = None,
+    handoff: int = DEFAULT_HANDOFF,
+) -> ScheduleChoice:
+    """Pick (schedule, M, V) jointly: minimize modeled step time subject
+    to a peak-activation budget.
+
+    ``memory_budget_items`` caps ``schedule_peak_items(...) / M`` — peak
+    stash measured in units of the *whole* item's activation footprint
+    (gpipe always costs exactly 1.0; 1F1B costs S/M once M > S, which is
+    how it buys bigger M under a budget).  ``None`` means unconstrained.
+    """
+    grid: list[tuple[str, int]] = [("gpipe", 1), ("one_f_one_b", 1)]
+    grid += [("interleaved", v) for v in interleave_options if v > 1]
+    best: ScheduleChoice | None = None
+    for name, v in grid:
+        m0 = optimal_num_chunks(
+            work_per_item, num_stages, per_tick_overhead, max_chunks, name, v, handoff
+        )
+        # scan a neighborhood: the memory constraint may push M up past
+        # the unconstrained optimum (more, smaller chunks stash less).
+        seen = sorted(
+            {
+                max(1, min(max_chunks, m))
+                for m in (
+                    m0,
+                    m0 // 2,
+                    m0 * 2,
+                    num_stages,
+                    handoff * num_stages,
+                    max_chunks,
+                )
+            }
+        )
+        for m in seen:
+            if memory_budget_items is not None:
+                peak = schedule_peak_items(name, num_stages, m, v) / m
+                if peak > memory_budget_items:
+                    continue
+            t = pipeline_step_time(
+                work_per_item, num_stages, m, per_tick_overhead, name, v, handoff
+            )
+            cand = ScheduleChoice(
+                schedule=name,
+                num_chunks=m,
+                interleave=v,
+                modeled_time=t,
+                bubble=schedule_bubble_fraction(name, num_stages, m, v, handoff),
+                peak_items=schedule_peak_items(name, num_stages, m, v),
+            )
+            if best is None or cand.modeled_time < best.modeled_time:
+                best = cand
+    if best is None:
+        raise ValueError(
+            "no (schedule, M) fits memory_budget_items="
+            f"{memory_budget_items} at num_stages={num_stages}"
+        )
+    return best
 
 
 @dataclasses.dataclass(frozen=True)

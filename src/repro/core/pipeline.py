@@ -6,14 +6,24 @@ pipelines microbatches across a mesh axis — the paper's technique as a
 first-class distribution feature (``--pipeline.stages``), intended for the
 slow inter-pod links of the production mesh.
 
-The forward schedule is GPipe (fill/drain); since every construct used
-(scan, ppermute, psum, where) is differentiable, ``jax.grad`` through
-:func:`pipeline_apply` yields the reversed backward pipeline automatically,
-with per-(cell, item) rematerialization when ``remat=True`` — activation
-memory is O(microbatch) instead of O(global batch).
+The forward schedule is pluggable (:mod:`repro.core.schedules`):
 
-Bubble accounting comes from :mod:`repro.core.chunking`: choose
-``num_microbatches`` with :func:`repro.core.chunking.optimal_num_chunks`.
+* ``gpipe`` — fill/drain, bubble ``h(S-1)/(M + h(S-1))``;
+* ``one_f_one_b`` — same executed forward, 1F1B memory model
+  (steady-state stash ``min(S, M)`` microbatches instead of ``M``);
+* ``interleaved`` — each device owns ``interleave`` non-contiguous layer
+  groups, bubble ``h(S-1)/(V·M + h(S-1))``.
+
+Since every construct used (scan, ring ppermute futures, where, dynamic
+slicing) is differentiable, ``jax.grad`` through :func:`pipeline_apply`
+yields the reversed backward pipeline automatically, with per-(cell,
+item) rematerialization when ``remat=True`` — activation memory is
+O(microbatch) instead of O(global batch).
+
+Bubble accounting comes from :mod:`repro.core.chunking`: choose the
+(schedule, microbatch count) pair with
+:func:`repro.core.chunking.optimal_schedule` (or just ``M`` with
+:func:`repro.core.chunking.optimal_num_chunks`).
 """
 from __future__ import annotations
 
@@ -35,10 +45,35 @@ class PipelineConfig:
     num_microbatches: int = 1
     axis_name: str = "pod"
     remat: bool = True
+    # Pipeline schedule: "gpipe", "one_f_one_b", or "interleaved".  With
+    # "interleaved", each device owns `interleave` non-contiguous stage
+    # groups; num_stages must stay divisible by (axis size * interleave).
+    schedule: str = "gpipe"
+    interleave: int = 1
+
+    def __post_init__(self):
+        from repro.core.schedules import validate_schedule
+
+        validate_schedule(self.schedule, self.interleave)
+        if self.num_stages % self.interleave != 0:
+            raise ValueError(
+                f"num_stages={self.num_stages} not divisible by "
+                f"interleave={self.interleave}"
+            )
 
     @property
     def bubble_fraction(self) -> float:
-        return chunking.bubble_fraction(self.num_stages, self.num_microbatches)
+        """Modeled bubble under this config's schedule (num_stages is used
+        as the device count; a synchronous h=1 hand-off is assumed — the
+        classic figure.  The evaluator's measured plan is the ground
+        truth: ``FutureEvaluator.plan_for(M).bubble_fraction``)."""
+        return chunking.schedule_bubble_fraction(
+            self.schedule,
+            self.num_stages // self.interleave,
+            self.num_microbatches,
+            self.interleave,
+            handoff=1,
+        )
 
 
 def pipeline_apply(
@@ -53,8 +88,9 @@ def pipeline_apply(
     ``stage_params`` leaves must have leading axis ``num_stages``.  ``x``
     leaves have leading axis global-batch, chunked into
     ``num_microbatches`` items.  With ``mesh`` given, stages are pipelined
-    over ``config.axis_name`` (Future); otherwise evaluated sequentially
-    (Lazy).  Results are identical.
+    over ``config.axis_name`` under ``config.schedule`` (Future);
+    otherwise evaluated sequentially (Lazy).  Results are identical for
+    every schedule.
     """
     program = StreamProgram(
         cell_fn=lambda params, xb: (params, stage_fn(params, xb)),
@@ -67,7 +103,12 @@ def pipeline_apply(
     if mesh is None or config.num_stages == 1:
         evaluator = LazyEvaluator()
     else:
-        evaluator = FutureEvaluator(mesh, config.axis_name)
+        evaluator = FutureEvaluator(
+            mesh,
+            config.axis_name,
+            schedule=config.schedule,
+            interleave=config.interleave,
+        )
     _, out = evaluator(program, items)
     return chunking.unchunk_axis(out)
 

@@ -1,0 +1,334 @@
+"""Pipeline schedules as data: per-tick (stage, microbatch, group) plans.
+
+The Future evaluator (:mod:`repro.core.stream`) is a plan *executor*: it
+runs a ``lax.scan`` whose per-tick behaviour — which microbatch each
+device works on, which of its local cell groups it applies, where its
+input comes from (fresh injection vs. a received in-flight buffer slot),
+and whether its output is a final result — is read from host-built int32
+tables.  A :class:`SchedulePlan` is those tables plus the buffer-slot and
+item-feed bookkeeping the executor needs.  Building plans on the host
+keeps the device program schedule-oblivious: new schedules are new table
+builders, not new evaluators.
+
+Three schedules ship:
+
+``gpipe``
+    Fill/drain.  Stage ``s`` runs microbatch ``m`` at tick
+    ``h*s + m`` where ``h`` is the hand-off latency (2 for the
+    issue-early/force-late ring used by the evaluator).  Peak in-flight
+    activation stash under autodiff training: all ``M`` microbatches.
+
+``one_f_one_b``
+    1F1B.  The *executed forward* plan is tick-identical to GPipe (the
+    backward is derived by ``jax.grad``, which reverses the forward
+    scan; true interleaved F/B execution would need a hand-written VJP
+    pipeline — an open item).  What differs is the modeled training
+    schedule: steady-state activation stash is ``min(S, M)``
+    microbatches instead of ``M``, which is what
+    :func:`repro.core.chunking.optimal_schedule` uses to admit larger
+    ``M`` under a memory budget.
+
+``interleaved``
+    Each device owns ``V`` non-contiguous cell groups (virtual stages;
+    global virtual stage ``p`` lives on device ``p % D``).  Per-tick
+    work shrinks by ``V`` while the fill/drain tick count stays
+    ``h*(D-1)``, cutting the bubble from ``h(D-1)/(M + h(D-1))`` to
+    ``h(D-1)/(V*M + h(D-1))`` — Megatron-style interleaving expressed
+    as a stream-of-futures plan.  The hand-off stays a single ring
+    ``ppermute`` because consecutive virtual stages always sit on
+    ring-adjacent devices (``p+1`` lives on ``(d+1) % D``).
+
+Plans are built by a greedy list scheduler (priority: lowest microbatch,
+then deepest virtual stage) under two constraints: a device runs one
+unit per tick, and unit ``(p, m)`` may start ``handoff`` ticks after
+``(p-1, m)`` finished.  For ``M >= D`` this achieves the closed-form
+tick counts above; the plan's own ``num_ticks``/``bubble_fraction`` are
+always the ground truth (and are tested against the analytic model).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+SCHEDULES = ("gpipe", "one_f_one_b", "interleaved")
+
+# Hand-off latency of the evaluator's issue-early/force-late ring: an
+# output computed at tick t is ppermute'd *during* tick t+1 (overlapping
+# that tick's compute) and consumable at tick t+2.
+DEFAULT_HANDOFF = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulePlan:
+    """Host-built tick tables for one (schedule, D, M, V) instance.
+
+    Arrays of shape ``(num_ticks, num_stages)`` unless noted:
+
+    Attributes:
+      microbatch: microbatch worked by device d at tick t; -1 = idle.
+      group: local cell-group (virtual stage) index in ``[0, V)``.
+      read_slot: in-flight buffer slot the input comes from; -1 = inject
+        a fresh item (only ever -1 where ``group == 0`` on device 0).
+      recv_slot: slot in which the value *arriving* at tick t (sent by
+        the ring predecessor during tick t) is stored; -1 = discard.
+      collect: 1 where the produced output is a final result (only on
+        device D-1, which owns the last virtual stage).
+      inject / feed_reload / feed_advance: shape ``(num_ticks,)`` —
+        item-feed carousel control (see stream.py); ``feed_idx`` is the
+        local item-shard index reloaded when ``feed_reload`` is set.
+      num_slots: in-flight buffer depth K (1 for gpipe, ~V interleaved).
+    """
+
+    name: str
+    num_stages: int
+    num_microbatches: int
+    interleave: int
+    handoff: int
+    num_ticks: int
+    microbatch: np.ndarray
+    group: np.ndarray
+    read_slot: np.ndarray
+    recv_slot: np.ndarray
+    collect: np.ndarray
+    inject: np.ndarray
+    feed_reload: np.ndarray
+    feed_idx: np.ndarray
+    feed_advance: np.ndarray
+    num_slots: int
+
+    @property
+    def bubble_fraction(self) -> float:
+        """Idle fraction of the (ticks x devices) grid — measured, not modeled."""
+        busy = int((self.microbatch >= 0).sum())
+        return 1.0 - busy / (self.num_ticks * self.num_stages)
+
+    @property
+    def peak_inflight_items(self) -> int:
+        """Modeled peak per-device activation stash (microbatches) under
+        autodiff training — the schedule's memory term."""
+        return peak_inflight_items(
+            self.name, self.num_stages, self.num_microbatches, self.interleave
+        )
+
+
+def peak_inflight_items(
+    name: str, num_stages: int, num_microbatches: int, interleave: int = 1
+) -> int:
+    """Peak per-device activation stash (microbatches) under autodiff
+    training.  Single source of truth — chunking.schedule_peak_items and
+    SchedulePlan.peak_inflight_items both delegate here.
+
+    gpipe stashes every microbatch; 1F1B's steady state holds at most S;
+    interleaved (Megatron 1F1B-style) holds one warm-up window per
+    virtual chunk.
+    """
+    v = validate_schedule(name, interleave)
+    if name == "one_f_one_b":
+        return min(num_microbatches, num_stages)
+    if name == "interleaved":
+        return min(v * num_microbatches, num_stages * v)
+    return num_microbatches
+
+
+def _allocate_slots(work, finish, num_stages: int, num_positions: int):
+    """Interval-graph coloring of in-flight hand-offs via smallest-free.
+
+    (p, m) computed at tick tau on dev(p) is ppermute'd during tick
+    tau+1 and lands on dev(p+1) = (dev+1) % D, where it occupies a slot
+    until (p+1, m) reads it.  Returns (recv_slot, read_slot, num_slots).
+    """
+    num_ticks = len(work)
+    d_ = num_stages
+    read_slot = np.full((num_ticks, d_), -1, np.int32)
+    recv_slot = np.full((num_ticks, d_), -1, np.int32)
+    free: list[list[int]] = [[] for _ in range(d_)]
+    next_slot = [0] * d_
+    release: dict[tuple[int, int], list[int]] = {}
+    for tt in range(num_ticks):
+        for dev in range(d_):
+            for slot in release.pop((tt, dev), []):
+                free[dev].append(slot)
+        for dev in range(d_):
+            unit = work[tt][dev]
+            if unit is None:
+                continue
+            p, m = unit
+            if p == num_positions - 1:
+                continue  # final output: collected, arrival discarded
+            rdev = (dev + 1) % d_
+            consume = finish[(p + 1, m)]
+            if free[rdev]:
+                slot = min(free[rdev])
+                free[rdev].remove(slot)
+            else:
+                slot = next_slot[rdev]
+                next_slot[rdev] += 1
+            recv_slot[tt + 1, rdev] = slot
+            read_slot[consume, rdev] = slot
+            release.setdefault((consume + 1, rdev), []).append(slot)
+    return recv_slot, read_slot, max(1, max(next_slot))
+
+
+def validate_schedule(name: str, interleave: int = 1) -> int:
+    """Check (schedule, interleave) and return the effective V.
+
+    Single validation shared by the plan builder, the evaluator, and the
+    chunking model so a configuration the executor rejects can never
+    yield a plausible modeled number.
+    """
+    if name not in SCHEDULES:
+        raise ValueError(f"unknown schedule {name!r}; expected one of {SCHEDULES}")
+    if name == "interleaved":
+        if interleave < 1:
+            raise ValueError(f"interleave must be >= 1, got {interleave}")
+        return interleave
+    if interleave != 1:
+        raise ValueError(f"schedule {name!r} requires interleave=1, got {interleave}")
+    return 1
+
+
+def _validate(name: str, num_stages: int, num_microbatches: int, interleave: int):
+    validate_schedule(name, interleave)
+    if num_stages < 1 or num_microbatches < 1:
+        raise ValueError("num_stages and num_microbatches must be >= 1")
+
+
+def build_plan(
+    name: str,
+    num_stages: int,
+    num_microbatches: int,
+    interleave: int = 1,
+    handoff: int = DEFAULT_HANDOFF,
+) -> SchedulePlan:
+    """Greedy list-schedule of all (virtual stage, microbatch) units.
+
+    Two unit priorities are tried and the best plan kept, comparing
+    (makespan, in-flight buffer depth): microbatch-major ``(m, -p)``
+    keeps the buffer depth O(V) and matches the closed-form makespan
+    whenever D | M; chunk-major ``(p // D, m)`` can shave ticks on
+    ragged M at the cost of deeper buffers.
+    """
+    _validate(name, num_stages, num_microbatches, interleave)
+    d_, m_, v_ = num_stages, num_microbatches, interleave
+    num_positions = d_ * v_  # global virtual stages
+
+    # -- greedy simulation -------------------------------------------------
+    def _greedy(priority):
+        """Incremental list scheduling: units enter a per-device ready
+        heap the tick their dependency clears (O(U log U) total — the
+        naive rescan-all-pending version is O(M^2 D) and stalls tracing
+        for thousand-microbatch streams)."""
+        import heapq
+
+        finish: dict[tuple[int, int], int] = {}  # (p, m) -> tick computed
+        ready: list[list] = [[] for _ in range(d_)]  # per-device heaps
+        becomes_ready: dict[int, list[tuple[int, int]]] = {}
+        for m in range(m_):
+            heapq.heappush(ready[0], (priority((0, m)), (0, m)))
+        work: list[list[tuple[int, int] | None]] = []  # work[t][d] = (p, m)
+        remaining = num_positions * m_
+        t = 0
+        while remaining:
+            for unit in becomes_ready.pop(t, ()):
+                heapq.heappush(ready[unit[0] % d_], (priority(unit), unit))
+            row: list[tuple[int, int] | None] = [None] * d_
+            for dev in range(d_):
+                if ready[dev]:
+                    row[dev] = heapq.heappop(ready[dev])[1]
+            # successors become consumable `handoff` ticks after commit
+            for unit in row:
+                if unit is not None:
+                    finish[unit] = t
+                    remaining -= 1
+                    p, m = unit
+                    if p + 1 < num_positions:
+                        becomes_ready.setdefault(t + handoff, []).append(
+                            (p + 1, m)
+                        )
+            work.append(row)
+            t += 1
+            if t > (m_ + handoff) * (num_positions + 1) + 8:  # pragma: no cover
+                raise RuntimeError(f"schedule {name} did not converge")
+        return work, finish
+
+    # Pick by (makespan, buffer depth): chunk-major can shave ticks on
+    # ragged M but lets wraparound hand-offs pile up (K ~ O(M)), which
+    # is exactly the memory blowup interleaved schedules exist to avoid.
+    # Each candidate is slot-allocated exactly once; the winner's tables
+    # are reused directly.
+    candidates = []
+    for priority in (
+        lambda u: (u[1], -u[0]),  # microbatch-major: K stays O(V)
+        lambda u: (u[0] // d_, u[1]),  # chunk-major: best T ragged
+    ):
+        work, finish = _greedy(priority)
+        recv_slot, read_slot, num_slots = _allocate_slots(
+            work, finish, d_, num_positions
+        )
+        candidates.append(
+            (len(work), num_slots, work, finish, recv_slot, read_slot)
+        )
+    num_ticks, num_slots, work, finish, recv_slot, read_slot = min(
+        candidates, key=lambda c: (c[0], c[1])
+    )
+
+    # -- tick tables -------------------------------------------------------
+    microbatch = np.full((num_ticks, d_), -1, np.int32)
+    group = np.zeros((num_ticks, d_), np.int32)
+    collect = np.zeros((num_ticks, d_), np.int32)
+    for tt, row in enumerate(work):
+        for dev, unit in enumerate(row):
+            if unit is None:
+                continue
+            p, m = unit
+            microbatch[tt, dev] = m
+            group[tt, dev] = p // d_
+            if p == num_positions - 1:
+                collect[tt, dev] = 1
+
+    # injections are the units that read no slot: (p=0, m) on device 0
+    for tt in range(num_ticks):
+        unit = work[tt][0]
+        if unit is not None and unit[0] == 0:
+            assert read_slot[tt, 0] == -1
+
+    # -- item-feed carousel ------------------------------------------------
+    # Items are round-robin sharded: device d holds items {d, d+D, ...}.
+    # A single-item register F circulates on the reverse ring (d -> d-1);
+    # every D consumptions each device reloads F from its local shard, so
+    # item c is on device 0 exactly when the plan injects it.  Stalls
+    # freeze the whole ring (the advance flag is tick-uniform).
+    inject = np.zeros(num_ticks, np.int32)
+    feed_reload = np.zeros(num_ticks, np.int32)
+    feed_idx = np.zeros(num_ticks, np.int32)
+    consumed = 0
+    for tt in range(num_ticks):
+        unit = work[tt][0]
+        if unit is not None and unit[0] == 0:
+            inject[tt] = 1
+            if consumed % d_ == 0:
+                feed_reload[tt] = 1
+                feed_idx[tt] = consumed // d_
+            consumed += 1
+    feed_advance = inject.copy()
+    assert consumed == m_
+
+    return SchedulePlan(
+        name=name,
+        num_stages=d_,
+        num_microbatches=m_,
+        interleave=v_,
+        handoff=handoff,
+        num_ticks=num_ticks,
+        microbatch=microbatch,
+        group=group,
+        read_slot=read_slot,
+        recv_slot=recv_slot,
+        collect=collect,
+        inject=inject,
+        feed_reload=feed_reload,
+        feed_idx=feed_idx,
+        feed_advance=feed_advance,
+        num_slots=num_slots,
+    )

@@ -21,14 +21,30 @@ substitution:
 
 * :class:`LazyEvaluator` — ``lax.scan`` over items and cells on the local
   device.  Sequential, memoized carry: the Lazy monad.
-* :class:`FutureEvaluator` — cells are sharded across a mesh axis and items
-  are software-pipelined through them with ``lax.ppermute``.  Each cell's
-  output is "a future" — an in-flight buffer the next stage forces by
-  consuming it one tick later.  The Future monad, TPU-style.
+* :class:`FutureEvaluator` — a **schedule-pluggable pipeline engine**.
+  Cells are sharded across a mesh axis; a host-built
+  :class:`repro.core.schedules.SchedulePlan` (``gpipe``, ``one_f_one_b``
+  or ``interleaved``) dictates, per tick, which microbatch each device
+  advances and through which of its local cell groups.  The inter-stage
+  hand-off is a ring ``ppermute`` routed through
+  :func:`repro.core.future.ppermute_future`: the collective is *issued
+  before* the tick's ``lax.scan`` over local cells and *forced after*
+  it, so the permute is in flight during compute (the future is the
+  mechanism, not a metaphor).  Input items are round-robin sharded over
+  the stage axis and delivered to stage 0 by a reverse-ring carousel
+  (no per-stage replication of all M items, no per-tick dynamic
+  gather); outputs accumulate only on the last stage and leave the
+  region as a stage-sharded buffer (no ``psum`` replication — the
+  caller takes the last stage's shard with one static slice).
 
 Both produce bit-identical results (tested, including under hypothesis);
 only the schedule differs.  This mirrors the paper's claim that the
-algorithm text is unchanged when substituting Future for Lazy.
+algorithm text is unchanged when substituting Future for Lazy — and,
+one level up, that the *schedule* can change without touching either.
+
+All constructs (scan, ppermute, where, dynamic slicing, the barrier in
+``force``) are differentiable, so ``jax.grad`` through any schedule
+yields the reversed backward pipeline automatically.
 
 Unbounded streams do not exist on XLA (shape-static); the paper itself
 bounds the stream in its Future version ("otherwise the computation will
@@ -38,12 +54,17 @@ streams are bounded, with masked validity where needed.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import math
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
+
+from repro import compat
+from repro.core.future import ppermute_future
+from repro.core.schedules import SchedulePlan, build_plan
 
 PyTree = Any
 CellFn = Callable[[PyTree, PyTree], tuple[PyTree, PyTree]]
@@ -133,7 +154,7 @@ class LazyEvaluator:
 
 
 # ---------------------------------------------------------------------------
-# Future evaluator — cells pipelined across a mesh axis
+# Future evaluator — the schedule-pluggable pipeline engine
 # ---------------------------------------------------------------------------
 
 
@@ -144,126 +165,307 @@ def _tree_where(pred, a, b):
 class FutureEvaluator:
     """Pipelined evaluation across ``axis_name`` of ``mesh``.
 
-    ``num_cells`` must be divisible by the axis size D; each device owns a
-    contiguous group of ``num_cells // D`` cells (one *stage*).  Item b is
-    processed by stage s at tick ``t = b + s``; stage s's output at tick t
-    is ``ppermute``\\ d to stage s+1, which forces it (consumes the future)
-    at tick t+1.  Steady state keeps all D stages busy; fill/drain bubbles
-    cost ``(D-1)/(M+D-1)`` of the ticks — the paper's observation that
-    per-cell footprint (chunk size) must dominate the overhead, made exact.
+    ``num_cells`` must be divisible by ``D * interleave`` where D is the
+    axis size.  With ``interleave == 1`` device d owns one contiguous
+    group of cells (one stage); with ``interleave == V > 1`` it owns V
+    non-contiguous groups (virtual stages ``v*D + d`` — the interleaved
+    schedule's layout, which keeps every hand-off on the same one-hop
+    ring because virtual stage p+1 always lives on device (d+1) % D).
+
+    The tick loop executes a :class:`~repro.core.schedules.SchedulePlan`:
+
+    * tick t issues the ring ``ppermute`` of the *previous* tick's
+      output first (``ppermute_future``), runs the local cell-group
+      ``lax.scan``, then forces the permute anchored on that compute —
+      the collective and the scan overlap, and a value produced at tick
+      t is consumed at tick t+2 (the plan's ``handoff``);
+    * items are round-robin sharded over the axis (device d holds items
+      ``d, d+D, ...``) and a one-item carousel register rotates them
+      into stage 0 exactly when the plan injects them;
+    * only the last device writes the output buffer; it is returned
+      stage-sharded and the caller slices the final stage's block — no
+      collective touches the outs.
 
     The schedule is data-oblivious, so ``jax.grad`` through it yields the
-    reversed (backward) pipeline automatically — GPipe by autodiff.
+    reversed (backward) pipeline automatically — GPipe by autodiff (1F1B
+    and interleaved inherit the same property; see schedules.py for what
+    ``one_f_one_b`` does and does not change forward-only).
     """
 
     name = "future"
 
-    def __init__(self, mesh: jax.sharding.Mesh, axis_name: str):
+    def __init__(
+        self,
+        mesh: jax.sharding.Mesh,
+        axis_name: str,
+        schedule: str = "gpipe",
+        interleave: int = 1,
+    ):
         self.mesh = mesh
         self.axis_name = axis_name
+        self.schedule = schedule
+        self.interleave = interleave if schedule == "interleaved" else 1
+        if schedule != "interleaved" and interleave != 1:
+            raise ValueError(f"{schedule=} requires interleave=1, got {interleave}")
         # Partial-manual shard_map: only the pipeline axis is manual; any
         # other mesh axes (data/model) keep automatic GSPMD partitioning,
         # so stages can themselves be FSDP×TP sharded (production mode).
-        self._partial = len(mesh.axis_names) > 1
+
+    def plan_for(self, num_microbatches: int) -> SchedulePlan:
+        """The tick plan this evaluator would run for M microbatches."""
+        return build_plan(
+            self.schedule,
+            self.mesh.shape[self.axis_name],
+            num_microbatches,
+            self.interleave,
+        )
 
     def __call__(self, program: StreamProgram, items: PyTree) -> tuple[PyTree, PyTree]:
         axis = self.axis_name
         num_devices = self.mesh.shape[axis]
-        if program.num_cells % num_devices != 0:
+        num_virtual = num_devices * self.interleave
+        if program.num_cells % num_virtual != 0:
             raise ValueError(
                 f"num_cells={program.num_cells} not divisible by axis "
-                f"'{axis}' size {num_devices}"
+                f"'{axis}' size {num_devices} x interleave {self.interleave}"
             )
+        cells_per_group = program.num_cells // num_virtual
         num_items = jax.tree.leaves(items)[0].shape[0]
+        plan = self.plan_for(num_items)
+        d_, v_, k_ = num_devices, self.interleave, plan.num_slots
+        m_ = num_items
 
-        spec_state = jax.tree.map(
-            lambda _: jax.sharding.PartitionSpec(axis), program.init_state
+        # Device-major cell layout: device d's shard holds its V groups
+        # back to back (group v = cells of virtual stage v*D + d).  For
+        # V == 1 this is the identity; for V > 1 it is one gather at the
+        # region boundary (and its inverse on the way out).
+        perm = np.concatenate(
+            [
+                np.arange(cells_per_group) + (v * d_ + d) * cells_per_group
+                for d in range(d_)
+                for v in range(v_)
+            ]
         )
-        spec_rep = jax.tree.map(lambda _: jax.sharding.PartitionSpec(), items)
+        inv_perm = np.argsort(perm)
+        init_state = program.init_state
+        if v_ > 1:
+            init_state = jax.tree.map(lambda x: x[perm], init_state)
 
-        shard_map_kwargs = dict(
-            mesh=self.mesh,
-            in_specs=(spec_state, spec_rep),
-            out_specs=(spec_state, spec_rep),
-        )
-        if self._partial:
-            shard_map_kwargs["axis_names"] = {axis}
+        # Round-robin item shards: global (D, J, ...) with device d's row
+        # holding items d, d+D, ...; zero-padded when D does not divide M.
+        feed_len = math.ceil(m_ / d_)
 
-        @partial(jax.shard_map, **shard_map_kwargs)
-        def pipelined(local_states, items):
-            stage = lax.axis_index(axis)
-            # The loop carry varies per-device; mark it so (JAX>=0.8 vma).
-            def _varying(x):
-                return lax.pcast(x, (axis,), to="varying")
-
-            item0 = jax.tree.map(lambda x: _varying(jnp.zeros_like(x[0])), items)
-            outs0 = jax.tree.map(lambda x: _varying(jnp.zeros_like(x)), items)
-
-            cell_fn = (
-                jax.checkpoint(program.cell_fn)
-                if program.remat
-                else program.cell_fn
+        def _to_feed(x):
+            pad = feed_len * d_ - m_
+            if pad:
+                x = jnp.concatenate(
+                    [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)]
+                )
+            return jnp.swapaxes(
+                x.reshape((feed_len, d_) + x.shape[1:]), 0, 1
             )
 
-            def stage_fn(states, flowing):
-                # One device-stage = Lazy scan over its local cells: the
-                # Future monad wraps whole chunks of the chain (the paper's
-                # §7 grouping, applied to cells as well as items).
+        items_fed = jax.tree.map(_to_feed, items)
+
+        spec_shard = lambda tree: jax.tree.map(
+            lambda _: jax.sharding.PartitionSpec(axis), tree
+        )
+
+        fwd_ring = [(i, (i + 1) % d_) for i in range(d_)]
+        rev_ring = [(i, (i - 1) % d_) for i in range(d_)]
+
+        # Plan tables as device constants; rows are consumed as scan xs
+        # so no tick indexing ever lowers to a gather.
+        xs = {
+            "mb": jnp.asarray(plan.microbatch),
+            "grp": jnp.asarray(plan.group),
+            "rslot": jnp.asarray(plan.read_slot),
+            "cslot": jnp.asarray(plan.recv_slot),
+            "coll": jnp.asarray(plan.collect),
+            "inj_reload": jnp.asarray(plan.feed_reload),
+            "inj_idx": jnp.asarray(plan.feed_idx),
+            "inj_adv": jnp.asarray(plan.feed_advance),
+        }
+
+        cell_fn = (
+            jax.checkpoint(program.cell_fn) if program.remat else program.cell_fn
+        )
+        mutable = program.mutable_state
+
+        def pipelined(stage_ids, local_states, local_items):
+            # Stage index arrives as a stage-sharded input rather than
+            # lax.axis_index: the latter lowers to PartitionId, which the
+            # 0.4.x SPMD partitioner rejects inside partial-manual regions.
+            stage = stage_ids[0]
+            local_items = jax.tree.map(lambda x: x[0], local_items)  # (J, ...)
+            # The loop carry varies per-device; mark it so (vma JAX).
+            def _varying(x):
+                return compat.pcast(x, (axis,), to="varying")
+
+            item_shape = jax.tree.map(lambda x: x[0], local_items)
+            zero_item = jax.tree.map(
+                lambda x: _varying(jnp.zeros_like(x)), item_shape
+            )
+            buf0 = jax.tree.map(
+                lambda x: _varying(jnp.zeros((k_,) + x.shape, x.dtype)),
+                item_shape,
+            )
+            outs0 = jax.tree.map(
+                lambda x: _varying(jnp.zeros((m_,) + x.shape, x.dtype)),
+                item_shape,
+            )
+            if v_ > 1:
+                local_states = jax.tree.map(
+                    lambda x: x.reshape((v_, cells_per_group) + x.shape[1:]),
+                    local_states,
+                )
+
+            def group_scan(states_g, flowing):
+                # One device-group = Lazy scan over its local cells: the
+                # Future monad wraps whole chunks of the chain (the
+                # paper's §7 grouping, applied to cells as well as items).
                 def cell(fl, st):
                     new_st, out = cell_fn(st, fl)
-                    if not program.mutable_state:
+                    if not mutable:
                         new_st = st
                     return out, new_st
 
-                out, new_states = lax.scan(cell, flowing, states)
+                out, new_states = lax.scan(cell, flowing, states_g)
                 return new_states, out
 
-            def tick(carry, t):
-                local_states, buf, outs = carry
-                # Stage 0 injects item t; later stages force the future
-                # their predecessor emitted at tick t-1.
-                injected = jax.tree.map(
-                    lambda x: x[jnp.clip(t, 0, num_items - 1)], items
+            def tick(carry, x):
+                states, out_prev, feed, buf, outs = carry
+                mb = jnp.take(x["mb"], stage)
+                grp = jnp.take(x["grp"], stage)
+                rslot = jnp.take(x["rslot"], stage)
+                cslot = jnp.take(x["cslot"], stage)
+                coll = jnp.take(x["coll"], stage)
+
+                # 1. Issue both collectives *now*; they complete while
+                # this tick's cell scan runs (forced below).
+                send_fut = ppermute_future(out_prev, axis, fwd_ring)
+                feed_cur = _tree_where(
+                    x["inj_reload"] > 0,
+                    jax.tree.map(
+                        lambda it: lax.dynamic_index_in_dim(
+                            it, x["inj_idx"], keepdims=False
+                        ),
+                        local_items,
+                    ),
+                    feed,
                 )
-                inp = _tree_where(stage == 0, injected, buf)
-                valid = (t - stage >= 0) & (t - stage < num_items)
-                new_states, out = stage_fn(local_states, inp)
-                if program.mutable_state:
-                    local_states = _tree_where(valid, new_states, local_states)
-                # Last stage materializes the result for item t-stage.
-                write = valid & (stage == num_devices - 1)
-                idx = jnp.clip(t - stage, 0, num_items - 1)
+                feed_fut = ppermute_future(feed_cur, axis, rev_ring)
+
+                # 2. Input: a fresh injection (stage 0) or a buffered
+                # future the predecessor emitted `handoff` ticks ago.
+                slot_val = jax.tree.map(
+                    lambda b: lax.dynamic_index_in_dim(
+                        b, jnp.clip(rslot, 0, k_ - 1), keepdims=False
+                    ),
+                    buf,
+                )
+                inp = _tree_where(rslot < 0, feed_cur, slot_val)
+
+                # 3. Advance mb through this tick's cell group.
+                if v_ > 1:
+                    states_g = jax.tree.map(
+                        lambda s: lax.dynamic_index_in_dim(
+                            s, grp, keepdims=False
+                        ),
+                        states,
+                    )
+                else:
+                    states_g = states
+                new_sg, out = group_scan(states_g, inp)
+                valid = mb >= 0
+                if mutable:
+                    new_sg = _tree_where(valid, new_sg, states_g)
+                    if v_ > 1:
+                        states = jax.tree.map(
+                            lambda s, g: lax.dynamic_update_index_in_dim(
+                                s, g, grp, 0
+                            ),
+                            states,
+                            new_sg,
+                        )
+                    else:
+                        states = new_sg
+
+                # 4. Last virtual stage: materialize the result locally.
+                # Masked row-level dynamic update (not where(o.at[].set))
+                # so XLA can update the scan carry in place instead of
+                # copying the whole outs buffer every tick.
+                write = valid & (coll > 0)
+                idx = jnp.clip(mb, 0, m_ - 1)
                 outs = jax.tree.map(
-                    lambda o, v: jnp.where(
-                        write, o.at[idx].set(v), o
+                    lambda o, v: lax.dynamic_update_index_in_dim(
+                        o,
+                        jnp.where(
+                            write,
+                            v,
+                            lax.dynamic_index_in_dim(o, idx, keepdims=False),
+                        ),
+                        idx,
+                        0,
                     ),
                     outs,
                     out,
                 )
-                # The future: out is now in flight to stage+1.
-                buf = jax.tree.map(
-                    lambda x: lax.ppermute(
-                        x, axis, [(i, i + 1) for i in range(num_devices - 1)]
-                    ),
-                    out,
-                )
-                return (local_states, buf, outs), None
 
-            ticks = jnp.arange(num_items + num_devices - 1)
-            (local_states, _, outs), _ = lax.scan(
-                tick, (local_states, item0, outs0), ticks
-            )
-            # Only the last stage holds valid outs; replicate via psum.
-            outs = jax.tree.map(
-                lambda o: lax.psum(
-                    jnp.where(stage == num_devices - 1, o, jnp.zeros_like(o)),
-                    axis,
-                ),
-                outs,
-            )
+                # 5. Force the futures, anchored on the compute they
+                # overlapped; store the arrival in its planned slot.
+                arrived = send_fut.force(anchor=out)
+                feed_arr = feed_fut.force(anchor=out)
+                slot = jnp.clip(cslot, 0, k_ - 1)
+                buf = jax.tree.map(
+                    lambda b, a: lax.dynamic_update_index_in_dim(
+                        b,
+                        jnp.where(
+                            cslot >= 0,
+                            a,
+                            lax.dynamic_index_in_dim(b, slot, keepdims=False),
+                        ),
+                        slot,
+                        0,
+                    ),
+                    buf,
+                    arrived,
+                )
+                feed = _tree_where(x["inj_adv"] > 0, feed_arr, feed_cur)
+                return (states, out, feed, buf, outs), None
+
+            carry0 = (local_states, zero_item, zero_item, buf0, outs0)
+            (local_states, _, _, _, outs), _ = lax.scan(tick, carry0, xs)
+            if v_ > 1:
+                local_states = jax.tree.map(
+                    lambda x: x.reshape((v_ * cells_per_group,) + x.shape[2:]),
+                    local_states,
+                )
             return local_states, outs
 
-        return pipelined(program.init_state, items)
+        pipelined = compat.shard_map(
+            pipelined,
+            mesh=self.mesh,
+            in_specs=(
+                jax.sharding.PartitionSpec(axis),
+                spec_shard(init_state),
+                spec_shard(items),
+            ),
+            out_specs=(spec_shard(init_state), spec_shard(items)),
+            axis_names={axis},
+        )
+        final_states, outs = pipelined(
+            jnp.arange(d_, dtype=jnp.int32), init_state, items_fed
+        )
+        if v_ > 1:
+            final_states = jax.tree.map(lambda x: x[inv_perm], final_states)
+        # outs is stage-sharded (D*M, ...); only the last stage's block is
+        # real.  One static slice at the boundary — no psum, no all-reduce.
+        outs = jax.tree.map(
+            lambda o: lax.slice_in_dim(o, (d_ - 1) * m_, d_ * m_, axis=0),
+            outs,
+        )
+        return final_states, outs
 
 
 def evaluate(

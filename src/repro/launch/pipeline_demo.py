@@ -19,6 +19,12 @@ train_4k on the 2×16×16 mesh with stages=2 over 'pod', and records the
 same roofline artifacts as the baseline DP-over-pod mode for comparison.
 
     PYTHONPATH=src python -m repro.launch.pipeline_demo
+
+NB toolchain: the partial-manual (pod=manual, data/model=auto) region of
+a full transformer trips a hard CHECK (`sharding.IsManualSubgroup()`) in
+XLA <= 0.4.37's SPMD partitioner — this dry-run needs the newer jaxlib
+the seed targeted.  Single-axis (fully manual) pipelines, i.e. every
+tier-1 path, compile fine on either toolchain via repro.compat.
 """
 import json
 import time
@@ -27,9 +33,10 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs.base import SHAPES
 from repro.configs.registry import get_config
-from repro.core.pipeline import PipelineConfig, pipeline_apply
+from repro.core.pipeline import pipeline_apply
 from repro.launch import specs as SP
 from repro.launch.dryrun import ARTIFACT_DIR
 from repro.launch.mesh import make_production_mesh
@@ -41,13 +48,28 @@ from repro.roofline import analysis as RL
 from repro.roofline import analytic as AN
 from repro.roofline import hlo_parse as HP
 from repro.train import optimizer as O
+from repro.train.train_step import TrainConfig
 
-NUM_STAGES = 2
 NUM_MICRO = 8
 ARCH = os.environ.get("PIPE_ARCH", "qwen3-32b")
 ATTN = os.environ.get("PIPE_ATTN", "chunked")
 SHAPE = "train_4k"
 REMAT = os.environ.get("PIPE_REMAT", "1") == "1"
+# Pipeline schedule knobs (see repro.core.schedules): gpipe (default),
+# one_f_one_b, or interleaved with PIPE_INTERLEAVE groups per device.
+# PIPE_STAGES is the number of *stage groups* of the model; it must be
+# (pod axis size x PIPE_INTERLEAVE), so the interleaved demo over the
+# 2-pod mesh is PIPE_SCHEDULE=interleaved PIPE_INTERLEAVE=2 PIPE_STAGES=4.
+SCHEDULE = os.environ.get("PIPE_SCHEDULE", "gpipe")
+INTERLEAVE = int(os.environ.get("PIPE_INTERLEAVE", "1"))
+NUM_STAGES = int(os.environ.get("PIPE_STAGES", str(2 * INTERLEAVE)))
+
+
+def _train_config():
+    return TrainConfig(
+        num_microbatches=NUM_MICRO, remat=REMAT,
+        pipeline_schedule=SCHEDULE, pipeline_interleave=INTERLEAVE,
+    )
 
 
 def staged_blocks_abstract(cfg, rules, mesh):
@@ -88,10 +110,7 @@ def staged_blocks_abstract(cfg, rules, mesh):
 
 def make_pipelined_loss(cfg, mesh):
     plans = T.block_plans(cfg)
-    pcfg = PipelineConfig(
-        num_stages=NUM_STAGES, num_microbatches=NUM_MICRO,
-        axis_name="pod", remat=REMAT,
-    )
+    pcfg = _train_config().pipeline_config(NUM_STAGES, axis_name="pod")
 
     def stage_fn(stage_params, x):
         positions = jnp.arange(x.shape[1])[None, :]
@@ -136,9 +155,9 @@ def make_pipelined_loss(cfg, mesh):
 
 def main():
     if _SMALL:
-        mesh = jax.make_mesh(
+        mesh = compat.make_mesh(
             (2, 2, 2), ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3,
+            axis_types=(compat.AxisType.Auto,) * 3,
         )
     else:
         mesh = make_production_mesh(multi_pod=True)
@@ -160,7 +179,7 @@ def main():
 
     step = make_pipelined_loss(cfg, mesh)
     t0 = time.perf_counter()
-    with jax.sharding.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         lowered = jax.jit(step, donate_argnums=(0,)).lower(a_params, a_batch)
         compiled = lowered.compile()
     compile_s = time.perf_counter() - t0
@@ -171,8 +190,9 @@ def main():
     record = {
         "cell": f"{ARCH}×{SHAPE}×multipod-PIPELINE",
         "mode": f"stream-future pipeline: stages={NUM_STAGES} over 'pod', "
-                f"microbatches={NUM_MICRO}, bubble="
-                f"{(NUM_STAGES-1)/(NUM_MICRO+NUM_STAGES-1):.3f}",
+                f"microbatches={NUM_MICRO}, schedule={SCHEDULE}"
+                f"x{INTERLEAVE}, bubble="
+                f"{_train_config().pipeline_config(NUM_STAGES).bubble_fraction:.3f}",
         "compile_seconds": compile_s,
         "memory_analysis": {
             "argument_size_gib": mem.argument_size_in_bytes / 2**30,

@@ -20,6 +20,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ArchConfig, MoEConfig
 from repro.models.params import ParamSpec
 
@@ -60,7 +61,7 @@ def _data_shards(t: int) -> int:
     whereas a flat cross-shard scatter triggers pathological resharding
     (observed: moonshot train_4k failed HLO verification at 256 chips).
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or mesh.empty:
         return 1
     shards = 1

@@ -17,6 +17,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.models import params as P_
 
 PyTree = Any
@@ -87,7 +88,11 @@ def prune_spec(spec: P, mesh: Mesh) -> P:
             parts.append(None)
         elif isinstance(part, tuple):
             kept = tuple(a for a in part if a in mesh.axis_names)
-            parts.append(kept if kept else None)
+            # normalize singleton tuples: modern PartitionSpec does this
+            # internally, 0.4.x does not — keep both spellings equal
+            parts.append(
+                None if not kept else (kept[0] if len(kept) == 1 else kept)
+            )
         else:
             parts.append(part if part in mesh.axis_names else None)
     while parts and parts[-1] is None:
@@ -155,14 +160,10 @@ def maybe_constrain(x, spec: P):
     import os
     if os.environ.get("REPRO_NO_CONSTRAIN") == "1":
         return x
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or mesh.empty:
         return x
-    manual = {
-        name
-        for name, kind in zip(mesh.axis_names, mesh.axis_types)
-        if kind == jax.sharding.AxisType.Manual
-    }
+    manual = compat.manual_axis_names(mesh)
     if manual:
         parts = []
         for part in spec:

@@ -93,6 +93,9 @@ class ResilientLoop:
         step = start_step
         history: list[dict] = []
         restarts_left = self.cfg.max_restarts
+        # Restart-from-nothing must replay from the *initial* state, not
+        # whatever the params had mutated to when the step blew up.
+        init_params, init_opt_state = params, opt_state
         while step < num_steps and not self._stop:
             try:
                 if fail_injector is not None:
@@ -125,6 +128,7 @@ class ResilientLoop:
                 restored_step = self.ckpt.latest_step()
                 if restored_step is None:
                     # No checkpoint yet: restart from the initial state.
+                    params, opt_state = init_params, init_opt_state
                     step = start_step
                     continue
                 state, step = self.ckpt.restore(

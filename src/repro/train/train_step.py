@@ -3,9 +3,12 @@
 The microbatch axis is a bounded stream (the paper's chunking knob): under
 plain accumulation it is evaluated Lazily (sequential scan, constant
 memory); under the pipeline config the same microbatches flow through
-layer stages on the ``pod`` axis (Future).  ``num_microbatches`` trades
-activation memory against fill/drain bubble per
-:func:`repro.core.chunking.optimal_num_chunks`.
+layer stages on the ``pod`` axis (Future) under a pluggable schedule
+(``pipeline_schedule``: gpipe / one_f_one_b / interleaved — see
+:mod:`repro.core.schedules`).  ``num_microbatches`` trades activation
+memory against fill/drain bubble per
+:func:`repro.core.chunking.optimal_schedule`, which picks the
+(schedule, M) pair jointly.
 """
 from __future__ import annotations
 
@@ -37,6 +40,26 @@ class TrainConfig:
     z_loss_coef: float = 1e-4
     moe_lb_coef: float = 1e-2
     moe_z_coef: float = 1e-3
+    # Layer-pipeline mode (stream-future over the pod axis): the tick
+    # schedule the FutureEvaluator executes and, for "interleaved", how
+    # many non-contiguous stage groups each device owns.
+    pipeline_schedule: str = "gpipe"
+    pipeline_interleave: int = 1
+
+    def pipeline_config(
+        self, num_stages: int, axis_name: str = "pod"
+    ) -> "PipelineConfig":
+        """The PipelineConfig this training config implies for a stage count."""
+        from repro.core.pipeline import PipelineConfig
+
+        return PipelineConfig(
+            num_stages=num_stages,
+            num_microbatches=self.num_microbatches,
+            axis_name=axis_name,
+            remat=self.remat,
+            schedule=self.pipeline_schedule,
+            interleave=self.pipeline_interleave,
+        )
 
 
 def lm_loss(params, cfg: ArchConfig, batch: PyTree, tcfg: TrainConfig):

@@ -1,0 +1,45 @@
+"""Real hypothesis when installed; a skipping stub when not.
+
+Tier-1 must collect and run offline.  A bare ``import hypothesis`` used
+to abort collection of seven modules; ``pytest.importorskip`` would skip
+those modules *wholesale*, losing every non-property test in them.  This
+shim keeps the module importable either way: with hypothesis absent,
+``@hypothesis.given(...)`` marks just that test skipped and strategy
+constructors return inert placeholders.
+"""
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # offline container: skip only the property tests
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """Placeholder accepted (and ignored) by the stub decorators."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):  # .filter/.map/.flatmap chains
+            return self
+
+    class _StrategiesModule:
+        def __getattr__(self, name):
+            return _Strategy()
+
+    class _HypothesisModule:
+        @staticmethod
+        def given(*args, **kwargs):
+            return pytest.mark.skip(reason="hypothesis not installed")
+
+        @staticmethod
+        def settings(*args, **kwargs):
+            return lambda fn: fn
+
+    hypothesis = _HypothesisModule()
+    st = _StrategiesModule()
+
+__all__ = ["HAVE_HYPOTHESIS", "hypothesis", "st"]

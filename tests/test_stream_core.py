@@ -1,21 +1,26 @@
 """Core Stream/Future construct: semantics, chunking math, combinators."""
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+from _hypothesis_stub import hypothesis, st  # skips @given tests offline
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import (
     Future,
     LazyEvaluator,
     StreamProgram,
     bubble_fraction,
+    build_plan,
     chunk_axis,
     defer,
     evaluate,
     optimal_num_chunks,
+    optimal_schedule,
     pipeline_step_time,
+    schedule_bubble_fraction,
+    schedule_peak_items,
+    schedule_ticks,
     unchunk_axis,
 )
 from repro.core.future import HostFuture
@@ -104,6 +109,93 @@ class TestChunking:
     def test_chunk_indivisible_raises(self):
         with pytest.raises(ValueError):
             chunk_axis(jnp.arange(10), 3)
+
+
+class TestSchedulePlans:
+    """The analytic chunking model must match the tick tables the
+    schedules actually emit — modeled bubble == measured bubble."""
+
+    GRID = [
+        (name, d, m, v)
+        for name in ("gpipe", "one_f_one_b")
+        for d in (1, 2, 3, 4, 8)
+        for m in (1, 2, 4, 5, 8, 16)
+        for v in (1,)
+    ] + [
+        ("interleaved", d, m, v)
+        for d in (2, 3, 4)
+        for m in (1, 2, 4, 5, 8, 16)
+        for v in (2, 3, 4)
+    ]
+
+    def test_model_ticks_match_plans(self):
+        for name, d, m, v in self.GRID:
+            plan = build_plan(name, d, m, v)
+            assert plan.num_ticks == schedule_ticks(
+                name, d, m, v, handoff=plan.handoff
+            ), (name, d, m, v)
+
+    def test_model_bubble_matches_plans(self):
+        for name, d, m, v in self.GRID:
+            plan = build_plan(name, d, m, v)
+            modeled = schedule_bubble_fraction(name, d, m, v, handoff=plan.handoff)
+            assert abs(plan.bubble_fraction - modeled) < 1e-9, (name, d, m, v)
+
+    def test_interleaving_shrinks_bubble(self):
+        g = build_plan("gpipe", 4, 8)
+        i2 = build_plan("interleaved", 4, 8, 2)
+        i4 = build_plan("interleaved", 4, 8, 4)
+        assert i4.bubble_fraction < i2.bubble_fraction < g.bubble_fraction
+
+    def test_every_unit_scheduled_once(self):
+        for name, d, m, v in [("gpipe", 4, 8, 1), ("interleaved", 4, 8, 2)]:
+            plan = build_plan(name, d, m, v)
+            seen = set()
+            for t in range(plan.num_ticks):
+                for dev in range(d):
+                    mb = plan.microbatch[t, dev]
+                    if mb >= 0:
+                        unit = (int(plan.group[t, dev]) * d + dev, int(mb))
+                        assert unit not in seen
+                        seen.add(unit)
+            assert len(seen) == d * v * m
+
+    def test_collection_only_on_last_stage(self):
+        for name, d, m, v in [("gpipe", 4, 8, 1), ("interleaved", 4, 8, 2)]:
+            plan = build_plan(name, d, m, v)
+            assert plan.collect[:, : d - 1].sum() == 0
+            assert plan.collect[:, d - 1].sum() == m
+
+    def test_peak_items_ordering(self):
+        # 1F1B's whole point: stash min(S, M) microbatches, not M
+        assert schedule_peak_items("one_f_one_b", 4, 16) == 4
+        assert schedule_peak_items("gpipe", 4, 16) == 16
+
+    def test_optimal_schedule_joint_pick(self):
+        # bubble-dominated regime: interleaving wins
+        choice = optimal_schedule(1.0, 8, 1e-6, max_chunks=64)
+        assert choice.schedule == "interleaved"
+        # overhead-dominated: plain schedules, tiny M (paper's primes case)
+        choice = optimal_schedule(1e-4, 8, 1e-2, max_chunks=64)
+        assert choice.interleave == 1 and choice.num_chunks == 1
+        # memory budget forces off gpipe (gpipe peak is always 1.0 items)
+        choice = optimal_schedule(
+            1.0, 8, 1e-4, max_chunks=256, memory_budget_items=0.5
+        )
+        assert choice.schedule != "gpipe"
+        assert (
+            schedule_peak_items(
+                choice.schedule, 8, choice.num_chunks, choice.interleave
+            )
+            / choice.num_chunks
+            <= 0.5
+        )
+
+    def test_schedule_validation(self):
+        with pytest.raises(ValueError):
+            build_plan("zigzag", 4, 8)
+        with pytest.raises(ValueError):
+            build_plan("gpipe", 4, 8, interleave=2)
 
 
 class TestFutureCombinators:
