@@ -1,6 +1,7 @@
 """Benchmark harness — one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only primes,...]
+    PYTHONPATH=src python -m benchmarks.run --check [--check-tolerance 0.1]
 
 Prints ``name,us_per_call,derived`` CSV.  quick mode (default) shrinks
 problem sizes so the suite completes in minutes on one CPU core; --full
@@ -8,7 +9,13 @@ uses the paper's sizes (Table 1: primes to 20000/60000, Fateman ^20).
 
 The pipeline suite additionally persists its (schedule x M) sweep —
 modeled vs measured — to ``BENCH_pipeline.json`` at the repo root, the
-perf-trajectory baseline future PRs diff against.
+perf-trajectory baseline future PRs diff against.  ``--check`` is the
+enforcement: it runs a fresh paired sweep, diffs every
+(schedule, devices, V, M) cell against the persisted baseline, and
+exits nonzero if any cell's wall-clock regressed by more than
+``--check-tolerance`` (default 10%) — the perf gate perf-sensitive PRs
+run before merging.  ``--check`` does not overwrite the baseline;
+re-run without it to re-baseline intentionally.
 """
 from __future__ import annotations
 
@@ -34,12 +41,112 @@ SUITES = {
     "roofline": bench_roofline,  # §Roofline table from dry-run artifacts
 }
 
+BASELINE_PATH = os.path.normpath(
+    os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_pipeline.json"
+    )
+)
+
+
+def _cell_key(record: dict) -> tuple:
+    """Identity of one sweep cell: compare like against like."""
+    return (
+        record["schedule"],
+        record["devices"],
+        record["interleave"],
+        record["num_microbatches"],
+        record["dim"],
+        record["rows"],
+    )
+
+
+def check_regressions(
+    baseline: list[dict], fresh: list[dict], tolerance: float
+) -> list[dict]:
+    """Cells whose measured wall-clock regressed past ``tolerance``.
+
+    Compares only cells present in both sweeps with identical problem
+    sizes (so a --check quick run never diffs against a --full
+    baseline).  Pure so the gate is unit-testable offline.
+    """
+    base = {_cell_key(r): r["measured_seconds"] for r in baseline}
+    regressions = []
+    for rec in fresh:
+        key = _cell_key(rec)
+        if key not in base:
+            continue
+        before, after = base[key], rec["measured_seconds"]
+        if after > before * (1.0 + tolerance):
+            regressions.append(
+                {
+                    "schedule": rec["schedule"],
+                    "devices": rec["devices"],
+                    "interleave": rec["interleave"],
+                    "num_microbatches": rec["num_microbatches"],
+                    "baseline_seconds": before,
+                    "measured_seconds": after,
+                    "ratio": after / before,
+                }
+            )
+    return regressions
+
+
+def run_check(tolerance: float, full: bool) -> int:
+    if not os.path.exists(BASELINE_PATH):
+        print(
+            f"no baseline at {BASELINE_PATH}; run the pipeline suite once "
+            "without --check to create it",
+            file=sys.stderr,
+        )
+        return 2
+    with open(BASELINE_PATH) as f:
+        baseline = json.load(f)["sweep"]
+    for row in bench_pipeline.run(quick=not full):
+        print(row)
+    fresh = getattr(bench_pipeline.run, "records", [])
+    compared = {
+        _cell_key(r) for r in fresh
+    } & {_cell_key(r) for r in baseline}
+    regressions = check_regressions(baseline, fresh, tolerance)
+    print(
+        f"# --check: {len(compared)} cells compared against baseline, "
+        f"{len(regressions)} regressed beyond {tolerance:.0%}",
+        file=sys.stderr,
+    )
+    for r in regressions:
+        print(
+            f"# REGRESSION {r['schedule']} D={r['devices']} "
+            f"V={r['interleave']} M={r['num_microbatches']}: "
+            f"{r['baseline_seconds']*1e3:.2f}ms -> "
+            f"{r['measured_seconds']*1e3:.2f}ms ({r['ratio']:.2f}x)",
+            file=sys.stderr,
+        )
+    if not compared:
+        print("# --check: no comparable cells (size mismatch?)", file=sys.stderr)
+        return 2
+    return 1 if regressions else 0
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale sizes")
     ap.add_argument("--only", default=None, help="comma-separated suite names")
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="diff a fresh pipeline sweep against BENCH_pipeline.json and "
+        "exit nonzero on wall-clock regression (the perf gate)",
+    )
+    ap.add_argument(
+        "--check-tolerance",
+        type=float,
+        default=0.10,
+        help="relative slowdown tolerated per sweep cell (default 0.10)",
+    )
     args = ap.parse_args()
+
+    if args.check:
+        raise SystemExit(run_check(args.check_tolerance, args.full))
 
     names = args.only.split(",") if args.only else list(SUITES)
     print("name,us_per_call,derived")
@@ -62,12 +169,9 @@ def main() -> None:
 def _write_pipeline_baseline(records: list) -> None:
     if not records:
         return
-    path = os.path.join(
-        os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_pipeline.json"
-    )
-    with open(os.path.normpath(path), "w") as f:
+    with open(BASELINE_PATH, "w") as f:
         json.dump({"sweep": records}, f, indent=2)
-    print(f"# wrote {os.path.normpath(path)}", file=sys.stderr)
+    print(f"# wrote {BASELINE_PATH}", file=sys.stderr)
 
 
 if __name__ == "__main__":

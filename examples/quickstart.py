@@ -1,9 +1,10 @@
-"""Quickstart: Stream with a substitutable evaluation monad.
+"""Quickstart: the Stream combinator algebra with a substitutable monad.
 
-Builds a tiny stream program, runs it under the Lazy monad (sequential)
-and — if more than one JAX device is available — under the Future monad
-(pipelined across devices), demonstrating the paper's monad substitution:
-the program text does not change, only the evaluator.
+Builds stream programs with the algebra — ``source . map . through .
+zip . collect`` — and runs them under the Lazy monad (sequential) and,
+if more than one JAX device is available, under the Future monad
+(pipelined across devices), demonstrating the paper's monad
+substitution: the program text does not change, only the evaluator.
 
 Run:
     PYTHONPATH=src python examples/quickstart.py
@@ -19,16 +20,15 @@ from repro import compat
 from repro.core import (
     FutureEvaluator,
     LazyEvaluator,
-    StreamProgram,
+    Stream,
     bubble_fraction,
-    evaluate,
     optimal_num_chunks,
 )
 from repro.algorithms import sieve
 
 
 def main():
-    # --- 1. A stream of dependent cells -----------------------------------
+    # --- 1. A stream program, written with combinators ---------------------
     # Cell s multiplies the flowing item by a per-cell weight and bumps a
     # per-cell counter (mutable state, like the sieve's claimed primes).
     def cell_fn(state, item):
@@ -38,25 +38,40 @@ def main():
     num_cells, num_items = 8, 16
     states = (jnp.linspace(0.5, 1.5, num_cells), jnp.zeros(num_cells, jnp.int32))
     items = jnp.linspace(-1.0, 1.0, num_items * 4).reshape(num_items, 4)
-    program = StreamProgram(cell_fn, states, num_cells)
 
-    (_, counts), outs = evaluate(program, items, LazyEvaluator())
-    print("lazy:   outs[0] =", np.asarray(outs[0]))
+    program = (
+        Stream.source(items)
+        .map(lambda x: x * 2.0)          # stateless: fused at lowering
+        .through(cell_fn, states)        # the chain of dependent cells
+    )
+
+    lazy = program.collect(LazyEvaluator())
+    print("lazy:   outs[0] =", np.asarray(lazy.items[0]))
 
     if jax.device_count() >= 2 and num_cells % jax.device_count() == 0:
         mesh = compat.make_mesh(
             (jax.device_count(),), ("pod",),
             axis_types=(compat.AxisType.Auto,),
         )
-        (_, counts_f), outs_f = evaluate(
-            program, items, FutureEvaluator(mesh, "pod")
-        )
-        print("future: outs[0] =", np.asarray(outs_f[0]))
-        print("lazy == future:", bool(jnp.allclose(outs, outs_f)))
+        fut = program.collect(FutureEvaluator(mesh, "pod"))
+        print("future: outs[0] =", np.asarray(fut.items[0]))
+        print("lazy == future:", bool(jnp.all(lazy.items == fut.items)))
         print(
             f"bubble fraction (S={jax.device_count()}, M={num_items}):",
             bubble_fraction(jax.device_count(), num_items),
         )
+
+        # --- 1b. Multi-source: zip a second stream in ----------------------
+        # Each source gets its own feed carousel; neither is replicated.
+        other = jnp.linspace(0.0, 1.0, num_items * 4).reshape(num_items, 4)
+        zipped = (
+            Stream.source(items)
+            .zip(Stream.source(other), lambda a, b: a + 0.25 * b)
+            .through(cell_fn, states)
+        )
+        zl = zipped.collect(LazyEvaluator())
+        zf = zipped.collect(FutureEvaluator(mesh, "pod"))
+        print("zip: lazy == future:", bool(jnp.all(zl.items == zf.items)))
     else:
         print("(single device: set XLA_FLAGS=--xla_force_host_platform_"
               "device_count=4 to see the Future evaluator)")
@@ -67,7 +82,7 @@ def main():
         optimal_num_chunks(1.0, 4, 1e-3),
     )
 
-    # --- 3. The paper's prime sieve (§5) ------------------------------------
+    # --- 3. The paper's prime sieve (§5): source . mask . through ----------
     primes, count = sieve.run_sieve(200, block_size=64, primes_per_cell=4)
     primes = np.asarray(primes)
     print(f"primes < 200 ({int(count)}):", primes[primes > 0])

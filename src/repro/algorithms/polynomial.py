@@ -20,12 +20,23 @@ Representation (SIMD adaptation, see DESIGN.md §2):
   able to avoid it").  In our masked-lane world cancellation just *clears a
   lane* (key := EMPTY) — no blocking; SIMD strictly improves on the wart.
 
-Stream decomposition used here (paper Fig. 2): items are chunks of ``x``;
-cell j holds a chunk of ``y``'s terms; a cell multiplies its terms by the
-flowing x-chunk's partial accumulator... — precisely::
+Stream decomposition used here (paper Fig. 2): a genuine **two-source
+zip program** in the combinator algebra —
 
-    item b  = partial product accumulator for x-chunk b  (flows)
+    Stream.source(x_chunks)                       # source 1: chunks of x
+          .zip(Stream.source(acc_chunks), ...)    # source 2: accumulators
+          .through(y_term_cells, y_state)         # cell j: chunk of y
+
+    item b  = {x-chunk b, partial accumulator b}  (flows)
     cell j  = y-term-chunk j: acc_b += multiply(x_b, m_j, c_j)
+
+Under :class:`FutureEvaluator` both sources are injected through the
+generalized feed carousel — each round-robin sharded over the stage
+ring, neither replicated per stage.  The accumulator source is not an
+artifact: seeding it with chunks of a third polynomial ``z`` computes
+the fused multiply-add ``x*y + z`` (:func:`times_into`) in the same
+pipeline pass, which is how dot-product-shaped polynomial work avoids
+materializing intermediates.
 
 Cells form the dependent `plus` chain the paper pipelines; different items
 (x-chunks) are independent, so the Future evaluator overlaps cell j on
@@ -46,7 +57,7 @@ import numpy as np
 
 from repro.algorithms import limb
 from repro.core.chunking import chunk_axis
-from repro.core.stream import LazyEvaluator, StreamProgram, evaluate
+from repro.core.graph import Stream
 
 EMPTY_KEY = np.int32(np.iinfo(np.int32).max)
 VAR_BITS = 10
@@ -184,7 +195,7 @@ def num_terms(p: Poly) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# times() as a StreamProgram
+# times() as a two-source zip Stream
 # ---------------------------------------------------------------------------
 
 
@@ -196,25 +207,8 @@ def _unflatten_poly(d) -> Poly:
     return Poly(d["keys"], d["coeffs"])
 
 
-def times_stream_program(
-    y: Poly,
-    terms_per_cell: int,
-    acc_capacity: int,
-) -> StreamProgram:
-    """Build the stream program for ``x * y``.
-
-    Cell j's state = y-term chunk j (keys (G,), coeffs (G, L)).  The item
-    flowing through is ``{x_chunk, acc}``; each cell does G
-    multiply-by-term-and-add steps (G = ``terms_per_cell`` is the paper §7
-    chunk-size knob).
-    """
-    if y.capacity % terms_per_cell != 0:
-        raise ValueError("y capacity not divisible by terms_per_cell")
-    num_cells = y.capacity // terms_per_cell
-    state = {
-        "keys": y.keys.reshape(num_cells, terms_per_cell),
-        "coeffs": y.coeffs.reshape(num_cells, terms_per_cell, y.num_limbs),
-    }
+def _y_cell_fn(acc_capacity: int):
+    """Cell j: acc += x_chunk * (each of my y-term slots)."""
 
     def cell_fn(cell_state, item):
         x_chunk = _unflatten_poly(item["x"])
@@ -239,11 +233,67 @@ def times_stream_program(
         )
         return cell_state, {"x": item["x"], "acc": acc_d}
 
-    return StreamProgram(
-        cell_fn=cell_fn,
-        init_state=state,
-        num_cells=num_cells,
-        mutable_state=False,
+    return cell_fn
+
+
+def times_stream(
+    x: Poly,
+    y: Poly,
+    *,
+    num_x_chunks: int = 1,
+    terms_per_cell: int = 1,
+    acc_capacity: int | None = None,
+    into: Poly | None = None,
+) -> Stream:
+    """The product as an algebra program: two sources zipped into a chain.
+
+    Source 1 streams chunks of ``x``; source 2 streams the running
+    accumulators — all-EMPTY for a plain product, or chunks of ``into``
+    for the fused multiply-add ``x*y + into``.  The zip pairs chunk b
+    with accumulator b (source order, deterministic); cell j holds
+    y-term chunk j (G = ``terms_per_cell`` is the paper §7 chunk-size
+    knob).  Collecting yields M partial accumulators to tree-add.
+    """
+    acc_capacity = acc_capacity or _product_capacity(x, y)
+    if x.capacity % num_x_chunks != 0:
+        raise ValueError("x capacity not divisible by num_x_chunks")
+    if y.capacity % terms_per_cell != 0:
+        raise ValueError("y capacity not divisible by terms_per_cell")
+    num_cells = y.capacity // terms_per_cell
+    state = {
+        "keys": y.keys.reshape(num_cells, terms_per_cell),
+        "coeffs": y.coeffs.reshape(num_cells, terms_per_cell, y.num_limbs),
+    }
+    # Chunking x leaves EMPTY padding distributed arbitrarily; that's fine —
+    # multiply_term propagates EMPTY lanes.
+    x_items = chunk_axis(_flatten_poly(x), num_x_chunks)
+    acc_keys = jnp.full((num_x_chunks, acc_capacity), EMPTY_KEY, jnp.int32)
+    acc_coeffs = jnp.zeros(
+        (num_x_chunks, acc_capacity, x.num_limbs), jnp.int32
+    )
+    if into is not None:
+        # Seed accumulator chunk 0 with `into` (added exactly once).
+        # .at[].set keeps this traceable, so times_into works under jit.
+        if into.capacity > acc_capacity:
+            raise ValueError(
+                f"into capacity {into.capacity} exceeds acc_capacity "
+                f"{acc_capacity}"
+            )
+        acc_keys = acc_keys.at[0, : into.capacity].set(into.keys)
+        acc_coeffs = acc_coeffs.at[0, : into.capacity].set(into.coeffs)
+    acc_items = {"keys": acc_keys, "coeffs": acc_coeffs}
+    return (
+        Stream.source(x_items)
+        .zip(
+            Stream.source(acc_items),
+            lambda x_chunk, acc: {"x": x_chunk, "acc": acc},
+        )
+        .through(
+            _y_cell_fn(acc_capacity),
+            state,
+            num_cells=num_cells,
+            mutable_state=False,
+        )
     )
 
 
@@ -261,22 +311,43 @@ def times(
     ``evaluator=None`` → Lazy (the paper's sequential mode);
     pass a :class:`FutureEvaluator` for the pipelined mode.
     """
+    return times_into(
+        x,
+        y,
+        None,
+        evaluator=evaluator,
+        num_x_chunks=num_x_chunks,
+        terms_per_cell=terms_per_cell,
+        acc_capacity=acc_capacity,
+    )
+
+
+def times_into(
+    x: Poly,
+    y: Poly,
+    z: Poly | None,
+    *,
+    evaluator=None,
+    num_x_chunks: int = 1,
+    terms_per_cell: int = 1,
+    acc_capacity: int | None = None,
+) -> Poly:
+    """Fused multiply-add ``x*y + z`` in one pipeline pass.
+
+    ``z`` rides the accumulator source (zip source 2), so the add costs
+    nothing extra — the two-source algebra at work.  ``z=None`` is the
+    plain product.
+    """
     acc_capacity = acc_capacity or _product_capacity(x, y)
-    if x.capacity % num_x_chunks != 0:
-        raise ValueError("x capacity not divisible by num_x_chunks")
-    program = times_stream_program(y, terms_per_cell, acc_capacity)
-    items = {
-        "x": chunk_axis(_flatten_poly(x), num_x_chunks),
-        "acc": {
-            "keys": jnp.full((num_x_chunks, acc_capacity), EMPTY_KEY, jnp.int32),
-            "coeffs": jnp.zeros(
-                (num_x_chunks, acc_capacity, x.num_limbs), jnp.int32
-            ),
-        },
-    }
-    # Chunking x leaves EMPTY padding distributed arbitrarily; that's fine —
-    # multiply_term propagates EMPTY lanes.
-    _, out_items = evaluate(program, items, evaluator)
+    stream = times_stream(
+        x,
+        y,
+        num_x_chunks=num_x_chunks,
+        terms_per_cell=terms_per_cell,
+        acc_capacity=acc_capacity,
+        into=z,
+    )
+    out_items = stream.collect(evaluator).items
     partials = [
         Poly(out_items["acc"]["keys"][b], out_items["acc"]["coeffs"][b])
         for b in range(num_x_chunks)

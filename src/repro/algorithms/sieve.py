@@ -18,46 +18,80 @@ it still has free slots.
 Under :class:`LazyEvaluator` this is the paper's sequential sieve; under
 :class:`FutureEvaluator` block b is filtered by cell j while cell j+1
 filters block b-1 — the pipeline of Figure 1.
+
+In the combinator algebra the sieve is the canonical ``mask`` program:
+the candidate stream is bounded (``Stream.range``-style blocks padded to
+a rectangle), so validity is data —
+
+    Stream.source(blocks).mask(lambda v: v < limit)
+          .through(sieve_cell, primes_state)
+
+``mask`` tags each block with ``{"value", "valid"}``; the filter cells
+then *narrow* the mask as composites are eliminated (the paper's
+``filter { _ % head != 0 }``).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from jax import lax
 
-from repro.core.stream import StreamProgram, evaluate
+from repro.core.graph import Stream
 
 
-def sieve_program(num_cells: int, primes_per_cell: int = 1) -> StreamProgram:
-    """Cells with state (primes (K,), int32; 0 = free slot)."""
+def sieve_cell(state, item):
+    """One chain cell: state = claimed primes (K,), 0 = free slot.
 
-    def cell_fn(state, item):
-        primes = state  # (K,)
-        values, valid = item["values"], item["valid"]
+    ``item`` is a masked block ``{"value": (B,), "valid": (B,)}`` as
+    produced by ``Stream.mask``; surviving candidates keep their valid
+    bit, eliminated composites lose it.
+    """
+    primes = state  # (K,)
+    values, valid = item["value"], item["valid"]
 
-        def slot(carry, p):
-            values, valid = carry
-            # If this slot already holds a prime, filter by it; otherwise
-            # claim the first survivor (which is prime: it survived every
-            # earlier prime's filter) and filter by it.
-            has_any = jnp.any(valid)
-            first = jnp.argmax(valid)
-            candidate = values[first]
-            new_p = jnp.where((p == 0) & has_any, candidate, p)
-            keep = jnp.where(
-                new_p > 0,
-                valid & (values % jnp.maximum(new_p, 1) != 0),
-                valid,
-            )
-            return (values, keep), new_p
+    def slot(carry, p):
+        values, valid = carry
+        # If this slot already holds a prime, filter by it; otherwise
+        # claim the first survivor (which is prime: it survived every
+        # earlier prime's filter) and filter by it.
+        has_any = jnp.any(valid)
+        first = jnp.argmax(valid)
+        candidate = values[first]
+        new_p = jnp.where((p == 0) & has_any, candidate, p)
+        keep = jnp.where(
+            new_p > 0,
+            valid & (values % jnp.maximum(new_p, 1) != 0),
+            valid,
+        )
+        return (values, keep), new_p
 
-        (values, valid), new_primes = lax.scan(slot, (values, valid), primes)
-        return new_primes, {"values": values, "valid": valid}
+    (values, valid), new_primes = lax.scan(slot, (values, valid), primes)
+    return new_primes, {"value": values, "valid": valid}
 
+
+def sieve_stream(
+    limit: int,
+    *,
+    block_size: int = 256,
+    primes_per_cell: int = 1,
+    num_cells: int | None = None,
+) -> Stream:
+    """The sieve as an algebra program: ``source . mask . through``."""
+    if num_cells is None:
+        # Upper bound on pi(limit): enough cell slots to hold every prime.
+        bound = int(_pi_upper_bound(limit))
+        num_cells = -(-bound // primes_per_cell)
+    n = limit - 2
+    num_blocks = -(-n // block_size)
+    values = np.arange(2, 2 + num_blocks * block_size, dtype=np.int32)
+    blocks = jnp.asarray(values.reshape(num_blocks, block_size))
     init = jnp.zeros((num_cells, primes_per_cell), jnp.int32)
-    return StreamProgram(cell_fn, init, num_cells)
+    return (
+        Stream.source(blocks)
+        .mask(lambda v: v < limit)
+        .through(sieve_cell, init, num_cells=num_cells)
+    )
 
 
 def run_sieve(
@@ -69,21 +103,14 @@ def run_sieve(
     evaluator=None,
 ):
     """All primes < ``limit``.  Returns (primes int32[num_slots], count)."""
-    # Upper bound on pi(limit): enough cell slots to hold every prime.
-    if num_cells is None:
-        bound = int(_pi_upper_bound(limit))
-        num_cells = -(-bound // primes_per_cell)
-    program = sieve_program(num_cells, primes_per_cell)
-    n = limit - 2
-    num_blocks = -(-n // block_size)
-    values = np.arange(2, 2 + num_blocks * block_size, dtype=np.int32)
-    valid = values < limit
-    items = {
-        "values": jnp.asarray(values.reshape(num_blocks, block_size)),
-        "valid": jnp.asarray(valid.reshape(num_blocks, block_size)),
-    }
-    states, _ = evaluate(program, items, evaluator)
-    primes = states.reshape(-1)
+    stream = sieve_stream(
+        limit,
+        block_size=block_size,
+        primes_per_cell=primes_per_cell,
+        num_cells=num_cells,
+    )
+    result = stream.collect(evaluator)
+    primes = result.states[0].reshape(-1)
     count = jnp.sum(primes > 0)
     return primes, count
 

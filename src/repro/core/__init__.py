@@ -1,10 +1,18 @@
 """Core: the paper's Stream-with-Future construct, in JAX.
 
 Public API:
-  StreamProgram, LazyEvaluator, FutureEvaluator, evaluate
+  Stream, StreamResult — the combinator algebra front door:
+    Stream.source(items).map(f).through(cell_fn, states)
+          .zip(other, combine).concat(other).mask(pred)
+          .collect(evaluator)
+  LazyEvaluator, FutureEvaluator, evaluate — the substitutable monads
+  StreamGraph IR internals (repro.core.graph): lower_chain, ChainProgram
+  StreamProgram — deprecated single-chain adapter; migrate via
+    Stream.from_program(program, items) (see the stream.py migration
+    note) — multi-source programs have no StreamProgram spelling
   Future, defer, HostFuture, collective futures
   SchedulePlan, build_plan (the schedule zoo: gpipe / one_f_one_b /
-  interleaved)
+  interleaved; multi-source feed carousels via inject_positions)
   ChunkPolicy, bubble_fraction, optimal_num_chunks, optimal_schedule
   PipelineConfig, pipeline_apply
 """
@@ -13,6 +21,7 @@ from repro.core.chunking import (
     ScheduleChoice,
     bubble_fraction,
     chunk_axis,
+    feed_peak_items,
     optimal_num_chunks,
     optimal_schedule,
     pipeline_step_time,
@@ -20,6 +29,12 @@ from repro.core.chunking import (
     schedule_peak_items,
     schedule_ticks,
     unchunk_axis,
+)
+from repro.core.graph import (
+    ChainProgram,
+    Stream,
+    StreamResult,
+    lower_chain,
 )
 from repro.core.schedules import SCHEDULES, SchedulePlan, build_plan
 from repro.core.future import (
@@ -44,6 +59,7 @@ from repro.core.stream import (
 )
 
 __all__ = [
+    "ChainProgram",
     "ChunkPolicy",
     "Future",
     "FutureEvaluator",
@@ -53,13 +69,17 @@ __all__ = [
     "SCHEDULES",
     "ScheduleChoice",
     "SchedulePlan",
+    "Stream",
     "StreamProgram",
+    "StreamResult",
     "all_gather_future",
     "bubble_fraction",
     "build_plan",
     "chunk_axis",
     "defer",
     "evaluate",
+    "feed_peak_items",
+    "lower_chain",
     "merge_stages",
     "optimal_num_chunks",
     "optimal_schedule",

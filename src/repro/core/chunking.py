@@ -28,6 +28,13 @@ closed-form tick count
 is exact against the greedy plans ``schedules.build_plan`` emits (tested
 over the full grid); ``h`` is the hand-off latency — 1 for a textbook
 synchronous pipeline, 2 for the evaluator's issue-early/force-late ring.
+
+Multi-injection plans (multi-source ``zip`` streams) leave ticks and
+bubble untouched — injections only add feed columns — but they do cost
+memory: :func:`feed_peak_items` models each source's round-robin shard
+plus carousel register, :func:`schedule_peak_items` charges extra
+sources against the activation stash, and :func:`optimal_schedule`
+takes ``num_sources`` so the budget constraint sees the feeds.
 """
 from __future__ import annotations
 
@@ -39,6 +46,7 @@ import jax.numpy as jnp
 
 from repro.core.schedules import (
     DEFAULT_HANDOFF,
+    feed_items_per_source,
     peak_inflight_items,
     validate_schedule,
 )
@@ -93,12 +101,40 @@ def schedule_bubble_fraction(
 
 
 def schedule_peak_items(
-    schedule: str, num_stages: int, num_chunks: int, interleave: int = 1
+    schedule: str,
+    num_stages: int,
+    num_chunks: int,
+    interleave: int = 1,
+    num_sources: int = 1,
 ) -> int:
     """Peak per-device activation stash (in microbatches) under autodiff
     training — the schedule's memory term (delegates to the single
-    definition in :mod:`repro.core.schedules`)."""
-    return peak_inflight_items(schedule, num_stages, num_chunks, interleave)
+    definition in :mod:`repro.core.schedules`).  ``num_sources > 1``
+    adds the extra sources' feed storage (multi-injection plans: one
+    round-robin shard plus one carousel register per extra source)."""
+    return peak_inflight_items(
+        schedule, num_stages, num_chunks, interleave, num_sources
+    )
+
+
+def feed_peak_items(
+    num_stages: int, num_chunks: int, num_sources: int = 1
+) -> int:
+    """Per-device item-feed storage of a multi-injection plan, in items.
+
+    Each source keeps its local round-robin shard (``ceil(M/S)`` items)
+    plus the one in-flight carousel register that rotates on the reverse
+    ring.  Tick count and bubble are *unchanged* by extra injections —
+    the plan tables are position-oblivious (tested against
+    ``build_plan(..., inject_positions=...)``); feeds are the only term
+    that scales with source count.
+    """
+    if num_sources < 1 or num_stages < 1 or num_chunks < 1:
+        raise ValueError(
+            f"need num_sources/num_stages/num_chunks >= 1, got "
+            f"{num_sources}/{num_stages}/{num_chunks}"
+        )
+    return num_sources * feed_items_per_source(num_stages, num_chunks)
 
 
 def pipeline_step_time(
@@ -206,6 +242,8 @@ def optimal_schedule(
     interleave_options: tuple[int, ...] = (1, 2, 4),
     memory_budget_items: float | None = None,
     handoff: int = DEFAULT_HANDOFF,
+    num_sources: int = 1,
+    chunks_divide: int | None = None,
 ) -> ScheduleChoice:
     """Pick (schedule, M, V) jointly: minimize modeled step time subject
     to a peak-activation budget.
@@ -214,9 +252,22 @@ def optimal_schedule(
     stash measured in units of the *whole* item's activation footprint
     (gpipe always costs exactly 1.0; 1F1B costs S/M once M > S, which is
     how it buys bigger M under a budget).  ``None`` means unconstrained.
+    ``num_sources > 1`` charges multi-injection feed storage against the
+    same budget (more sources push toward schedules that stash less).
+    ``chunks_divide`` restricts M to divisors of it (a global batch must
+    chunk evenly) — the constraint belongs *inside* the search, so the
+    returned choice's M, modeled time and budget check all describe the
+    schedule that actually runs.
     """
     grid: list[tuple[str, int]] = [("gpipe", 1), ("one_f_one_b", 1)]
     grid += [("interleaved", v) for v in interleave_options if v > 1]
+    divisors = None
+    if chunks_divide is not None:
+        divisors = [
+            d
+            for d in range(1, min(chunks_divide, max_chunks) + 1)
+            if chunks_divide % d == 0
+        ]
     best: ScheduleChoice | None = None
     for name, v in grid:
         m0 = optimal_num_chunks(
@@ -237,9 +288,18 @@ def optimal_schedule(
                 )
             }
         )
+        if divisors is not None:
+            # snap every candidate to its neighboring divisors
+            snapped = set()
+            for m in seen:
+                snapped.add(max((d for d in divisors if d <= m), default=1))
+                snapped.add(min((d for d in divisors if d >= m), default=divisors[-1]))
+            seen = sorted(snapped)
         for m in seen:
             if memory_budget_items is not None:
-                peak = schedule_peak_items(name, num_stages, m, v) / m
+                peak = (
+                    schedule_peak_items(name, num_stages, m, v, num_sources) / m
+                )
                 if peak > memory_budget_items:
                     continue
             t = pipeline_step_time(
@@ -251,7 +311,7 @@ def optimal_schedule(
                 interleave=v,
                 modeled_time=t,
                 bubble=schedule_bubble_fraction(name, num_stages, m, v, handoff),
-                peak_items=schedule_peak_items(name, num_stages, m, v),
+                peak_items=schedule_peak_items(name, num_stages, m, v, num_sources),
             )
             if best is None or cand.modeled_time < best.modeled_time:
                 best = cand

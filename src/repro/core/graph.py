@@ -1,0 +1,813 @@
+"""Stream combinator algebra and the StreamGraph IR.
+
+The paper's claim is that *any* algorithm expressible as a Stream
+computation parallelizes by monad substitution.  Real Stream programs
+compose — the paper's own examples are written with ``map``/``filter``/
+``zip``-style combinators — so the public front door is an algebra, not a
+single linear chain:
+
+    Stream.source(items)            # a bounded stream of M items
+          .map(f)                   # stateless per-item transform
+          .through(cell_fn, states) # a chain segment of dependent cells
+          .zip(other, combine)      # merge two streams item-by-item
+          .concat(other)            # one stream after another
+          .mask(pred)               # bounded-stream validity tagging
+          .collect(evaluator)       # run it
+
+Combinators build a typed **StreamGraph IR** — a DAG of
+:class:`SourceNode` / :class:`MapNode` / :class:`SegmentNode` /
+:class:`ZipNode` / :class:`ConcatNode` / :class:`MaskNode` — validated at
+construction (item counts, state shapes, pytree structure for ``concat``).
+Adjacent ``map``s fuse at construction (``s.map(f).map(g)`` builds the
+same one-node IR as ``s.map(g ∘ f)``), the first of the algebra's laws
+tested in ``tests/test_stream_algebra.py``.
+
+Two execution paths share the IR:
+
+* :func:`lazy_eval_graph` — the Lazy monad: topological composition of
+  ``lax.scan``s, one per node.  Runs *any* well-formed graph, including
+  zips whose both sides carry stateful segments.
+* :func:`lower_chain` — compiles the graph into a :class:`ChainProgram`
+  (fused chain segments + per-source injection points) that
+  :class:`repro.core.stream.FutureEvaluator` pipelines across devices.
+  Supported graphs are those in *spine normal form*: one trunk of
+  segments, where every ``zip`` merges in a stateless branch (source +
+  maps).  A ``zip`` of two stateful pipelines has no linear-pipeline
+  realization; lowering raises with a pointer to ``LazyEvaluator``.
+
+Push-fusion of stateless stages into their consumers is the classic
+stream-API optimization (Clash of the Lambdas, arXiv 1406.6631); the
+deterministic merge semantics of ``zip``/``concat`` follow the
+stream-ordering discipline of arXiv 2504.02975 — item *b* of a zip is
+``combine(left[b], right[b])``, independent of evaluator or schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+PyTree = Any
+CellFn = Callable[[PyTree, PyTree], tuple[PyTree, PyTree]]
+
+
+# ---------------------------------------------------------------------------
+# Validation helpers
+# ---------------------------------------------------------------------------
+
+
+def leading_axis_size(items: PyTree, what: str = "items") -> int:
+    """Common leading-axis length of every leaf, with clear errors.
+
+    Raises ``ValueError`` on an empty pytree or on leaves that disagree
+    about the leading axis (the stream length M must be unambiguous).
+    """
+    leaves = jax.tree.leaves(items)
+    if not leaves:
+        raise ValueError(f"{what} is an empty pytree; a stream needs >= 1 leaf")
+    sizes = set()
+    for leaf in leaves:
+        shape = getattr(leaf, "shape", None)
+        if not shape:
+            raise ValueError(
+                f"{what} leaves must be arrays with a leading stream axis; "
+                f"got scalar leaf {leaf!r}"
+            )
+        sizes.add(shape[0])
+    if len(sizes) != 1:
+        raise ValueError(
+            f"{what} leaves disagree on the leading (stream) axis: sizes "
+            f"{sorted(sizes)}; every leaf must have the same number of items"
+        )
+    return sizes.pop()
+
+
+def _tree_structure(items: PyTree):
+    return jax.tree.structure(items)
+
+
+def _check_concat_structures(lv: PyTree, rv: PyTree) -> None:
+    if _tree_structure(lv) != _tree_structure(rv):
+        raise ValueError(
+            "concat requires both streams to share one item pytree "
+            f"structure, got {_tree_structure(lv)} vs {_tree_structure(rv)}"
+        )
+
+
+def _concat_items(lv: PyTree, rv: PyTree) -> PyTree:
+    """Leaf-wise leading-axis concatenation, with the one shared error."""
+    _check_concat_structures(lv, rv)
+    return jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0), lv, rv)
+
+
+def _item_skeleton(node: "Node") -> PyTree | None:
+    """A zero-filled pytree with the node's per-item structure, when it is
+    statically derivable (sources, masks, concats); ``None`` once a user
+    function (map/zip/segment) whose output structure we cannot know
+    intervenes."""
+    if isinstance(node, SourceNode):
+        return jax.tree.map(lambda _: 0, node.items)
+    if isinstance(node, MaskNode):
+        up = _item_skeleton(node.upstream)
+        return None if up is None else {"valid": 0, "value": up}
+    if isinstance(node, ConcatNode):
+        return _item_skeleton(node.left)  # sides validated at construction
+    return None
+
+
+def apply_per_item(fn: Callable[[PyTree], PyTree], items: PyTree) -> PyTree:
+    """Apply a per-item ``fn`` across the leading stream axis.
+
+    ``lax.map`` (a scan), not ``vmap``: both evaluators apply per-item
+    transforms with the same primitive sequence per item, which is what
+    makes Lazy ≡ Future *bit*-equality hold for fused maps.
+    """
+    return lax.map(fn, items)
+
+
+# ---------------------------------------------------------------------------
+# IR nodes
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Node:
+    """Base IR node; identity (not structure) keyed, so graphs are DAGs."""
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SourceNode(Node):
+    items: PyTree
+    num_items: int
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class MapNode(Node):
+    fn: Callable[[PyTree], PyTree]
+    upstream: Node
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class MaskNode(Node):
+    """Bounded-stream validity: item -> {"value": item, "valid": pred(item)}.
+
+    Unbounded streams do not exist on XLA; validity masks are how bounded
+    streams express "the tail past here is not real data".
+    """
+
+    pred: Callable[[PyTree], jnp.ndarray]
+    upstream: Node
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SegmentNode(Node):
+    """A chain segment: ``num_cells`` dependent cells with stacked state."""
+
+    cell_fn: CellFn
+    init_state: PyTree
+    num_cells: int
+    mutable_state: bool
+    remat: bool
+    upstream: Node
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ZipNode(Node):
+    left: Node
+    right: Node
+    combine: Callable[[PyTree, PyTree], PyTree]
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ConcatNode(Node):
+    left: Node
+    right: Node
+
+
+def topo_nodes(sink: Node) -> list[Node]:
+    """All nodes reachable from ``sink``, dependencies first."""
+    order: list[Node] = []
+    seen: set[int] = set()
+
+    def visit(node: Node):
+        if id(node) in seen:
+            return
+        seen.add(id(node))
+        for dep in _inputs(node):
+            visit(dep)
+        order.append(node)
+
+    visit(sink)
+    return order
+
+
+def _inputs(node: Node) -> tuple[Node, ...]:
+    if isinstance(node, (MapNode, MaskNode, SegmentNode)):
+        return (node.upstream,)
+    if isinstance(node, (ZipNode, ConcatNode)):
+        return (node.left, node.right)
+    return ()
+
+
+def _num_items(node: Node) -> int:
+    if isinstance(node, SourceNode):
+        return node.num_items
+    if isinstance(node, (MapNode, MaskNode, SegmentNode)):
+        return _num_items(node.upstream)
+    if isinstance(node, ZipNode):
+        return _num_items(node.left)
+    if isinstance(node, ConcatNode):
+        return _num_items(node.left) + _num_items(node.right)
+    raise TypeError(f"unknown node {node!r}")
+
+
+# ---------------------------------------------------------------------------
+# The algebra
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamResult:
+    """What :meth:`Stream.collect` returns.
+
+    Attributes:
+      items: the collected output items (leading axis = stream length).
+      states: final per-segment states, in spine (upstream-to-downstream,
+        left-to-right) order — one entry per ``.through`` in the program.
+    """
+
+    items: PyTree
+    states: tuple[PyTree, ...]
+
+
+class Stream:
+    """A composable bounded stream — the algebra's handle onto the IR.
+
+    Streams are immutable; every combinator returns a new ``Stream``
+    sharing the upstream graph.  Nothing executes until
+    :meth:`collect`.
+    """
+
+    def __init__(self, node: Node):
+        self._node = node
+
+    # -- constructors -------------------------------------------------------
+
+    @staticmethod
+    def source(items: PyTree) -> "Stream":
+        """A stream of M items: every leaf's leading axis is the stream."""
+        m = leading_axis_size(items, "source items")
+        return Stream(SourceNode(items=items, num_items=m))
+
+    @staticmethod
+    def from_program(program, items: PyTree) -> "Stream":
+        """Adapter for the deprecated single-chain :class:`StreamProgram`.
+
+        ``Stream.from_program(p, items)`` ≡
+        ``Stream.source(items).through(p.cell_fn, p.init_state, ...)`` —
+        existing ``StreamProgram`` call sites migrate one line at a time.
+        """
+        return Stream.source(items).through(
+            program.cell_fn,
+            program.init_state,
+            num_cells=program.num_cells,
+            mutable_state=program.mutable_state,
+            remat=program.remat,
+        )
+
+    # -- combinators --------------------------------------------------------
+
+    def through(
+        self,
+        cell_fn: CellFn,
+        init_state: PyTree,
+        *,
+        num_cells: int | None = None,
+        mutable_state: bool = True,
+        remat: bool = False,
+    ) -> "Stream":
+        """A chain segment: ``num_cells`` dependent cells, item-ordered.
+
+        ``cell_fn(state, item) -> (state', item')``; ``init_state`` leaves
+        are stacked with leading axis ``num_cells`` (inferred when not
+        given).  Segments compose back-to-back: ``s.through(f, a).through
+        (g, b)`` is a longer chain, pipelined as one by the Future engine.
+        """
+        inferred = leading_axis_size(init_state, "init_state")
+        if num_cells is None:
+            num_cells = inferred
+        elif inferred != num_cells:
+            raise ValueError(
+                f"init_state leaves must have leading axis num_cells="
+                f"{num_cells}, got {inferred}"
+            )
+        if num_cells < 1:
+            raise ValueError(f"num_cells must be >= 1, got {num_cells}")
+        return Stream(
+            SegmentNode(
+                cell_fn=cell_fn,
+                init_state=init_state,
+                num_cells=num_cells,
+                mutable_state=mutable_state,
+                remat=remat,
+                upstream=self._node,
+            )
+        )
+
+    def map(self, fn: Callable[[PyTree], PyTree]) -> "Stream":
+        """Stateless per-item transform.  Adjacent maps fuse at
+        construction: ``s.map(f).map(g)`` builds one ``MapNode`` computing
+        ``g ∘ f`` — the same IR as ``s.map(lambda x: g(f(x)))``."""
+        node = self._node
+        if isinstance(node, MapNode):
+            inner = node.fn
+            fused = _compose(fn, inner)
+            return Stream(MapNode(fn=fused, upstream=node.upstream))
+        return Stream(MapNode(fn=fn, upstream=node))
+
+    def mask(self, pred: Callable[[PyTree], jnp.ndarray]) -> "Stream":
+        """Tag each item with validity: item -> {"value", "valid"}.
+
+        The bounded-stream concession made explicit: downstream cells see
+        which lanes are real.  ``pred`` maps an item to a boolean (or
+        boolean array over the item's lanes)."""
+        return Stream(MaskNode(pred=pred, upstream=self._node))
+
+    def zip(
+        self,
+        other: "Stream",
+        combine: Callable[[PyTree, PyTree], PyTree],
+    ) -> "Stream":
+        """Item-by-item merge of two equal-length streams.
+
+        Deterministic by construction: item ``b`` of the result is
+        ``combine(self[b], other[b])`` under every evaluator and schedule
+        — parallel sources merge in source order, never arrival order."""
+        m_l, m_r = _num_items(self._node), _num_items(other._node)
+        if m_l != m_r:
+            raise ValueError(
+                f"zip requires equal stream lengths, got {m_l} vs {m_r}"
+            )
+        return Stream(ZipNode(left=self._node, right=other._node, combine=combine))
+
+    def concat(self, other: "Stream") -> "Stream":
+        """This stream's items, then ``other``'s.  Associative:
+        ``(a ++ b) ++ c`` and ``a ++ (b ++ c)`` produce identical items."""
+        ls, rs = _item_skeleton(self._node), _item_skeleton(other._node)
+        if ls is not None and rs is not None:
+            _check_concat_structures(ls, rs)
+        return Stream(ConcatNode(left=self._node, right=other._node))
+
+    # -- execution ----------------------------------------------------------
+
+    @property
+    def num_items(self) -> int:
+        return _num_items(self._node)
+
+    @property
+    def num_cells(self) -> int:
+        """Total chain length along the spine (0 for segment-free graphs)."""
+        return sum(
+            n.num_cells for n in topo_nodes(self._node) if isinstance(n, SegmentNode)
+        )
+
+    @property
+    def node(self) -> Node:
+        return self._node
+
+    def nodes(self) -> list[Node]:
+        """The IR, dependencies first (for inspection and law tests)."""
+        return topo_nodes(self._node)
+
+    def collect(self, evaluator=None) -> StreamResult:
+        """Run the program.  ``None`` → the Lazy monad (sequential)."""
+        if evaluator is None:
+            from repro.core.stream import LazyEvaluator
+
+            evaluator = LazyEvaluator()
+        return evaluator.run_graph(self)
+
+    def lower(self) -> "ChainProgram":
+        """Compile to the linear-chain form the Future engine executes."""
+        return lower_chain(self._node)
+
+
+def _compose(outer, inner):
+    return lambda item: outer(inner(item))
+
+
+def _mask_fn(pred):
+    return lambda item: {"value": item, "valid": pred(item)}
+
+
+# ---------------------------------------------------------------------------
+# Lazy execution: topological lax.scan composition
+# ---------------------------------------------------------------------------
+
+
+def _run_segment(node: SegmentNode, items: PyTree) -> tuple[PyTree, PyTree]:
+    """The Lazy monad on one segment: scan items (outer) over cells (inner)."""
+    cell_fn = jax.checkpoint(node.cell_fn) if node.remat else node.cell_fn
+    mutable = node.mutable_state
+
+    def item_step(states, item):
+        def cell(flowing, state):
+            new_state, out = cell_fn(state, flowing)
+            if not mutable:
+                new_state = state
+            return out, new_state
+
+        out, new_states = lax.scan(cell, item, states)
+        return new_states, out
+
+    return lax.scan(item_step, node.init_state, items)
+
+
+def lazy_eval_graph(sink: Node) -> tuple[PyTree, tuple[PyTree, ...]]:
+    """Execute the IR node-by-node in topological order.
+
+    Returns ``(out_items, segment_final_states)`` with states ordered by
+    the topological position of their ``SegmentNode``s.  Runs any
+    well-formed graph — including zips of two stateful pipelines that the
+    chain lowering rejects.
+    """
+    values: dict[int, PyTree] = {}
+    seg_states: list[PyTree] = []
+    for node in topo_nodes(sink):
+        if isinstance(node, SourceNode):
+            leading_axis_size(node.items, "source items")
+            values[id(node)] = node.items
+        elif isinstance(node, MapNode):
+            values[id(node)] = apply_per_item(node.fn, values[id(node.upstream)])
+        elif isinstance(node, MaskNode):
+            values[id(node)] = apply_per_item(
+                _mask_fn(node.pred), values[id(node.upstream)]
+            )
+        elif isinstance(node, SegmentNode):
+            states, outs = _run_segment(node, values[id(node.upstream)])
+            seg_states.append(states)
+            values[id(node)] = outs
+        elif isinstance(node, ZipNode):
+            pair = (values[id(node.left)], values[id(node.right)])
+            values[id(node)] = apply_per_item(lambda ab: node.combine(*ab), pair)
+        elif isinstance(node, ConcatNode):
+            values[id(node)] = _concat_items(
+                values[id(node.left)], values[id(node.right)]
+            )
+        else:  # pragma: no cover
+            raise TypeError(f"unknown node {node!r}")
+    return values[id(sink)], tuple(seg_states)
+
+
+# ---------------------------------------------------------------------------
+# Chain lowering: spine normal form for the pipeline engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainSegment:
+    """One fused run of dependent cells in the lowered chain."""
+
+    cell_fn: CellFn
+    init_state: PyTree
+    num_cells: int
+    mutable_state: bool
+    remat: bool
+    # Fused stateless transform applied to each item entering the segment
+    # (a spine map pushed into its consumer — Clash-of-the-Lambdas-style
+    # push fusion).  Must preserve the flowing item structure.
+    pre_fn: Callable[[PyTree], PyTree] | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainInjection:
+    """One source feeding the chain at a given cell boundary.
+
+    ``cell_index`` 0 injects at the chain entry; interior indices merge
+    into the flow via ``combine(flowing, source_item)`` right before that
+    cell; ``cell_index == num_cells`` merges after the last cell
+    (post-pipeline).  ``combine is None`` only for the primary source.
+    ``materialize()`` returns the prepared items (source + fused maps),
+    computed once — never replicated per stage.
+    """
+
+    materialize: Callable[[], PyTree]
+    cell_index: int
+    combine: Callable[[PyTree, PyTree], PyTree] | None
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainProgram:
+    """Spine-normal-form program: what the Future engine pipelines.
+
+    ``injections[0]`` is the primary source (combine ``None``); every
+    other injection carries the zip combine that merges it in.  The
+    flowing item structure is fixed from the entry on (ring buffers are
+    shape-static), so interior combines must be structure-preserving.
+    """
+
+    segments: tuple[ChainSegment, ...]
+    injections: tuple[ChainInjection, ...]
+    finalize: Callable[[PyTree], PyTree] | None
+    num_cells: int
+    num_items: int
+
+
+def _pure_feed(node: Node):
+    """A stateless branch (source + maps/masks/concats/zips of such):
+    returns a ``materialize`` closure, or None if the branch has state."""
+    if isinstance(node, SourceNode):
+        return lambda: node.items
+    if isinstance(node, MapNode):
+        inner = _pure_feed(node.upstream)
+        if inner is None:
+            return None
+        return lambda: apply_per_item(node.fn, inner())
+    if isinstance(node, MaskNode):
+        inner = _pure_feed(node.upstream)
+        if inner is None:
+            return None
+        return lambda: apply_per_item(_mask_fn(node.pred), inner())
+    if isinstance(node, ConcatNode):
+        lf, rf = _pure_feed(node.left), _pure_feed(node.right)
+        if lf is None or rf is None:
+            return None
+        return lambda: _concat_items(lf(), rf())
+    if isinstance(node, ZipNode):
+        lf, rf = _pure_feed(node.left), _pure_feed(node.right)
+        if lf is None or rf is None:
+            return None
+        return lambda: apply_per_item(lambda ab: node.combine(*ab), (lf(), rf()))
+    return None
+
+
+def lower_chain(sink: Node) -> ChainProgram:
+    """Compile a spine-normal-form graph to a :class:`ChainProgram`.
+
+    Walks the spine from sink to root, fusing maps into their consumers:
+    tail maps into ``finalize``, source-side maps into each injection's
+    ``materialize``, interior spine maps into the downstream segment's
+    ``pre_fn`` (or the downstream zip's combine).  A ``zip`` contributes
+    an injection at the current cell boundary; its non-trunk side must be
+    stateless.  Raises ``ValueError`` for graphs with no linear-pipeline
+    realization (zip of two stateful pipelines) — run those under
+    ``LazyEvaluator``, which executes the general DAG.
+    """
+    num_items = _num_items(sink)
+
+    # Walk sink -> root (downstream to upstream), collecting spine ops in
+    # reverse order.  Maps buffer in ``pending`` until the next spine op
+    # up the walk reveals their producer: if the producer is the root
+    # source they belong to its materialize (per-item prepare, free to
+    # change structure); otherwise they fuse into the *downstream*
+    # consumer recorded last (segment pre_fn / zip combine / finalize).
+    rev_segments: list[ChainSegment] = []
+    # (cells_after, combine, materialize), downstream-first.
+    rev_injections: list[tuple[int, Callable, Callable]] = []
+    finalize: Callable | None = None
+    pending: list[Callable] = []  # maps since the last spine op, downstream-first
+    consumer: str = "finalize"  # what the next flush attaches to
+    cells_after = 0  # cells strictly downstream of the walk position
+
+    def _composed() -> Callable:
+        fns = list(pending)  # fns[0] applied last (it is the most downstream)
+        g = fns[-1]
+        for fn in reversed(fns[:-1]):
+            g = _compose(fn, g)
+        return g
+
+    def _flush():
+        nonlocal finalize, pending
+        if not pending:
+            return
+        fn = _composed()
+        if consumer == "finalize":
+            # The walk leaves "finalize" after the first spine op, so this
+            # flush happens at most once.
+            assert finalize is None
+            finalize = fn
+        elif consumer == "segment":
+            seg = rev_segments[-1]
+            pre = fn if seg.pre_fn is None else _compose(seg.pre_fn, fn)
+            rev_segments[-1] = dataclasses.replace(seg, pre_fn=pre)
+        else:  # "zip": wrap the combine's flowing argument
+            ca, combine, feed = rev_injections[-1]
+            rev_injections[-1] = (
+                ca,
+                lambda flow, src, _f=fn, _c=combine: _c(_f(flow), src),
+                feed,
+            )
+        pending = []
+
+    node = sink
+    while True:
+        if isinstance(node, (MapNode, MaskNode)):
+            fn = node.fn if isinstance(node, MapNode) else _mask_fn(node.pred)
+            pending.append(fn)
+            node = node.upstream
+        elif isinstance(node, SegmentNode):
+            _flush()
+            rev_segments.append(
+                ChainSegment(
+                    cell_fn=node.cell_fn,
+                    init_state=node.init_state,
+                    num_cells=node.num_cells,
+                    mutable_state=node.mutable_state,
+                    remat=node.remat,
+                )
+            )
+            consumer = "segment"
+            cells_after += node.num_cells
+            node = node.upstream
+        elif isinstance(node, ZipNode):
+            _flush()
+            feed, trunk, combine = _split_zip(node)
+            if feed is None:
+                raise ValueError(
+                    "zip of two stateful pipelines has no linear-pipeline "
+                    "form; evaluate this graph with LazyEvaluator instead"
+                )
+            rev_injections.append((cells_after, combine, feed))
+            consumer = "zip"
+            node = trunk
+        elif isinstance(node, (SourceNode, ConcatNode)):
+            feed = _pure_feed(node)
+            if feed is None:
+                raise ValueError(
+                    "the spine's root must be a stateless branch (source + "
+                    "maps/concats); a concat of stateful pipelines has no "
+                    "linear-pipeline form — use LazyEvaluator"
+                )
+            if pending:  # maps directly above the root: prepare the feed
+                fn = _composed()
+                inner = feed
+                feed = lambda _f=fn, _i=inner: apply_per_item(_f, _i())
+            return _finish_chain(
+                rev_segments, rev_injections, finalize, feed, num_items
+            )
+        else:  # pragma: no cover
+            raise TypeError(f"unknown node {node!r}")
+
+
+def _split_zip(node: ZipNode):
+    """Pick the stateless side of a zip as the feed branch.
+
+    Prefers ``right`` as the feed (``a.zip(b, f)`` reads "merge b into
+    a"); if only ``left`` is stateless the combine's arguments flip so
+    the surviving trunk stays the first argument.
+    Returns ``(feed_materialize | None, trunk_node, combine)``.
+    """
+    right_feed = _pure_feed(node.right)
+    if right_feed is not None:
+        return right_feed, node.left, node.combine
+    left_feed = _pure_feed(node.left)
+    if left_feed is not None:
+        c = node.combine
+        return left_feed, node.right, (lambda flow, src, _c=c: _c(src, flow))
+    return None, node, None
+
+
+def _finish_chain(rev_segments, rev_injections, finalize,
+                  primary_feed, num_items) -> ChainProgram:
+    segments = tuple(reversed(rev_segments))
+    num_cells = sum(s.num_cells for s in segments)
+    injections = [
+        ChainInjection(materialize=primary_feed, cell_index=0, combine=None)
+    ]
+    # rev order = downstream-first; restore spine order (upstream-first) so
+    # same-boundary combines fold in program order.
+    for cells_after, combine, feed in reversed(rev_injections):
+        injections.append(
+            ChainInjection(
+                materialize=feed,
+                cell_index=num_cells - cells_after,
+                combine=combine,
+            )
+        )
+    return ChainProgram(
+        segments=segments,
+        injections=tuple(injections),
+        finalize=finalize,
+        num_cells=num_cells,
+        num_items=num_items,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Multi-segment state unification (for the pipelined executor)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class UnifiedChain:
+    """One cell_fn + one stacked state for a multi-segment chain.
+
+    The per-cell state is ``{"seg": i, "pos": k, "parts": (...,)}`` where
+    ``parts[i]`` holds segment *i*'s state rows at that segment's cells
+    (zeros elsewhere — the padding cost is why single-segment chains take
+    the un-wrapped fast path).  ``cell_fn`` dispatches on ``seg`` with
+    ``lax.switch``, applying a segment's fused ``pre_fn`` only at its
+    first cell, so per-cell compute stays one segment's cell.
+    ``split_states(final)`` recovers per-segment final states.
+    """
+
+    cell_fn: CellFn
+    init_state: PyTree
+    num_cells: int
+    mutable_state: bool
+    remat: bool
+    split_states: Callable[[PyTree], tuple[PyTree, ...]]
+
+
+def _check_pre_fn_structure(pre_fn, item) -> None:
+    """A fused pre_fn runs under ``lax.cond`` against identity, so it must
+    keep the flowing item's pytree structure and leaf shapes/dtypes —
+    surface that contract as a clear error, not a cond type mismatch."""
+    ref = jax.eval_shape(lambda x: x, item)
+    got = jax.eval_shape(pre_fn, item)
+    sig = lambda t: [(l.shape, l.dtype) for l in jax.tree.leaves(t)]
+    if _tree_structure(ref) != _tree_structure(got) or sig(ref) != sig(got):
+        raise ValueError(
+            "a mid-spine map/mask fused into a segment must preserve the "
+            "flowing item structure (the pipeline's ring buffers are "
+            f"shape-static), got {_tree_structure(got)} from "
+            f"{_tree_structure(ref)}; structure-changing transforms "
+            "between segments have no linear-pipeline form — evaluate "
+            "this graph with LazyEvaluator instead"
+        )
+
+
+def unify_segments(segments: tuple[ChainSegment, ...]) -> UnifiedChain:
+    """Fuse heterogeneous segments into one scannable chain."""
+    num_cells = sum(s.num_cells for s in segments)
+    offsets = []
+    off = 0
+    for s in segments:
+        offsets.append(off)
+        off += s.num_cells
+
+    seg_id = jnp.concatenate(
+        [jnp.full((s.num_cells,), i, jnp.int32) for i, s in enumerate(segments)]
+    )
+    pos = jnp.concatenate(
+        [jnp.arange(s.num_cells, dtype=jnp.int32) for s in segments]
+    )
+
+    def _pad(leaf, i):
+        full = jnp.zeros((num_cells,) + leaf.shape[1:], leaf.dtype)
+        return lax.dynamic_update_slice_in_dim(full, leaf, offsets[i], axis=0)
+
+    parts = tuple(
+        jax.tree.map(lambda l, _i=i: _pad(l, _i), s.init_state)
+        for i, s in enumerate(segments)
+    )
+    init_state = {"seg": seg_id, "pos": pos, "parts": parts}
+
+    cell_fns = [
+        jax.checkpoint(s.cell_fn) if s.remat else s.cell_fn for s in segments
+    ]
+
+    def branch(i):
+        seg = segments[i]
+
+        def run(urow, item):
+            it = item
+            if seg.pre_fn is not None:
+                _check_pre_fn_structure(seg.pre_fn, item)
+                it = lax.cond(urow["pos"] == 0, seg.pre_fn, lambda x: x, item)
+            new_si, out = cell_fns[i](urow["parts"][i], it)
+            if not seg.mutable_state:
+                new_si = urow["parts"][i]
+            new_parts = urow["parts"][:i] + (new_si,) + urow["parts"][i + 1 :]
+            return {**urow, "parts": new_parts}, out
+
+        return run
+
+    branches = [branch(i) for i in range(len(segments))]
+
+    def cell_fn(urow, item):
+        return lax.switch(urow["seg"], branches, urow, item)
+
+    def split_states(final_state):
+        return tuple(
+            jax.tree.map(
+                lambda l, _i=i, _s=s: lax.dynamic_slice_in_dim(
+                    l, offsets[_i], _s.num_cells, axis=0
+                ),
+                final_state["parts"][i],
+            )
+            for i, s in enumerate(segments)
+        )
+
+    return UnifiedChain(
+        cell_fn=cell_fn,
+        init_state=init_state,
+        num_cells=num_cells,
+        mutable_state=any(s.mutable_state for s in segments),
+        # remat is applied per-branch above, never re-wrapped outside.
+        remat=False,
+        split_states=split_states,
+    )

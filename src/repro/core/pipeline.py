@@ -33,7 +33,8 @@ from typing import Any, Callable
 import jax
 
 from repro.core import chunking
-from repro.core.stream import FutureEvaluator, LazyEvaluator, StreamProgram
+from repro.core.graph import Stream
+from repro.core.stream import FutureEvaluator, LazyEvaluator
 
 PyTree = Any
 StageFn = Callable[[PyTree, PyTree], PyTree]  # (stage_params, x) -> y
@@ -91,15 +92,18 @@ def pipeline_apply(
     over ``config.axis_name`` under ``config.schedule`` (Future);
     otherwise evaluated sequentially (Lazy).  Results are identical for
     every schedule.
+
+    Routed through the StreamGraph IR: the stage stack is one algebra
+    segment, so model code composes with ``map``/``zip``-built streams.
     """
-    program = StreamProgram(
-        cell_fn=lambda params, xb: (params, stage_fn(params, xb)),
-        init_state=stage_params,
+    items = chunking.chunk_axis(x, config.num_microbatches)
+    stream = Stream.source(items).through(
+        lambda params, xb: (params, stage_fn(params, xb)),
+        stage_params,
         num_cells=config.num_stages,
         mutable_state=False,
         remat=config.remat,
     )
-    items = chunking.chunk_axis(x, config.num_microbatches)
     if mesh is None or config.num_stages == 1:
         evaluator = LazyEvaluator()
     else:
@@ -109,7 +113,7 @@ def pipeline_apply(
             schedule=config.schedule,
             interleave=config.interleave,
         )
-    _, out = evaluator(program, items)
+    out = stream.collect(evaluator).items
     return chunking.unchunk_axis(out)
 
 

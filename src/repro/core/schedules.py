@@ -75,8 +75,20 @@ class SchedulePlan:
       collect: 1 where the produced output is a final result (only on
         device D-1, which owns the last virtual stage).
       inject / feed_reload / feed_advance: shape ``(num_ticks,)`` —
-        item-feed carousel control (see stream.py); ``feed_idx`` is the
-        local item-shard index reloaded when ``feed_reload`` is set.
+        item-feed carousel control for the primary source (see
+        stream.py); ``feed_idx`` is the local item-shard index reloaded
+        when ``feed_reload`` is set.  Aliases of row 0 of the
+        generalized per-source tables below.
+      inject_positions: one virtual-stage position per source; position
+        0 is the chain entry.  Source *s* lives round-robin-sharded with
+        offset ``inject_devices[s]`` and is delivered by its own
+        reverse-ring carousel.
+      inject_devices: ``inject_positions[s] % num_stages`` — the device
+        that consumes source s.
+      src_feed_reload / src_feed_idx / src_feed_advance / src_consume:
+        shape ``(num_sources, num_ticks)`` — per-source carousel
+        columns; ``src_consume[s, t]`` is 1 when source s's next item is
+        merged into the flow at tick t (on device ``inject_devices[s]``).
       num_slots: in-flight buffer depth K (1 for gpipe, ~V interleaved).
     """
 
@@ -96,6 +108,16 @@ class SchedulePlan:
     feed_idx: np.ndarray
     feed_advance: np.ndarray
     num_slots: int
+    inject_positions: tuple[int, ...] = (0,)
+    inject_devices: tuple[int, ...] = (0,)
+    src_feed_reload: np.ndarray | None = None
+    src_feed_idx: np.ndarray | None = None
+    src_feed_advance: np.ndarray | None = None
+    src_consume: np.ndarray | None = None
+
+    @property
+    def num_sources(self) -> int:
+        return len(self.inject_positions)
 
     @property
     def bubble_fraction(self) -> float:
@@ -108,12 +130,20 @@ class SchedulePlan:
         """Modeled peak per-device activation stash (microbatches) under
         autodiff training — the schedule's memory term."""
         return peak_inflight_items(
-            self.name, self.num_stages, self.num_microbatches, self.interleave
+            self.name,
+            self.num_stages,
+            self.num_microbatches,
+            self.interleave,
+            num_sources=self.num_sources,
         )
 
 
 def peak_inflight_items(
-    name: str, num_stages: int, num_microbatches: int, interleave: int = 1
+    name: str,
+    num_stages: int,
+    num_microbatches: int,
+    interleave: int = 1,
+    num_sources: int = 1,
 ) -> int:
     """Peak per-device activation stash (microbatches) under autodiff
     training.  Single source of truth — chunking.schedule_peak_items and
@@ -121,14 +151,27 @@ def peak_inflight_items(
 
     gpipe stashes every microbatch; 1F1B's steady state holds at most S;
     interleaved (Megatron 1F1B-style) holds one warm-up window per
-    virtual chunk.
+    virtual chunk.  Every source past the first adds its feed storage —
+    a local round-robin shard of ceil(M/S) items plus the one-item
+    carousel register — measured in the same whole-item unit (the
+    primary source's feed predates this model and is treated as part of
+    the input batch, not the schedule's stash).
     """
     v = validate_schedule(name, interleave)
+    feed = (num_sources - 1) * feed_items_per_source(num_stages, num_microbatches)
     if name == "one_f_one_b":
-        return min(num_microbatches, num_stages)
+        return min(num_microbatches, num_stages) + feed
     if name == "interleaved":
-        return min(v * num_microbatches, num_stages * v)
-    return num_microbatches
+        return min(v * num_microbatches, num_stages * v) + feed
+    return num_microbatches + feed
+
+
+def feed_items_per_source(num_stages: int, num_microbatches: int) -> int:
+    """Per-device feed storage of ONE source, in items: its local
+    round-robin shard (``ceil(M/D)``) plus the in-flight carousel
+    register.  The single formula site — ``peak_inflight_items`` and
+    ``chunking.feed_peak_items`` both delegate here."""
+    return -(-num_microbatches // max(num_stages, 1)) + 1
 
 
 def _allocate_slots(work, finish, num_stages: int, num_positions: int):
@@ -200,6 +243,7 @@ def build_plan(
     num_microbatches: int,
     interleave: int = 1,
     handoff: int = DEFAULT_HANDOFF,
+    inject_positions: tuple[int, ...] = (0,),
 ) -> SchedulePlan:
     """Greedy list-schedule of all (virtual stage, microbatch) units.
 
@@ -208,10 +252,30 @@ def build_plan(
     keeps the buffer depth O(V) and matches the closed-form makespan
     whenever D | M; chunk-major ``(p // D, m)`` can shave ticks on
     ragged M at the cost of deeper buffers.
+
+    ``inject_positions`` generalizes the item-feed carousel to
+    multi-source streams: one virtual-stage position per source (the
+    first must be 0 — the chain entry).  Each source gets its own
+    round-robin feed ring and reload/advance/consume columns; the tick
+    tables themselves are position-oblivious, so injections never change
+    the makespan — source s's item m is simply due on device
+    ``p_s % D`` the tick unit ``(p_s, m)`` starts.
     """
     _validate(name, num_stages, num_microbatches, interleave)
     d_, m_, v_ = num_stages, num_microbatches, interleave
     num_positions = d_ * v_  # global virtual stages
+    if not inject_positions or inject_positions[0] != 0:
+        raise ValueError(
+            f"inject_positions must start with the chain entry 0, got "
+            f"{inject_positions}"
+        )
+    for p in inject_positions:
+        if not 0 <= p < num_positions:
+            raise ValueError(
+                f"inject position {p} outside [0, {num_positions}) "
+                f"(D={d_} x V={v_} virtual stages; post-pipeline merges "
+                f"are applied by the evaluator, not the plan)"
+            )
 
     # -- greedy simulation -------------------------------------------------
     def _greedy(priority):
@@ -287,32 +351,41 @@ def build_plan(
             if p == num_positions - 1:
                 collect[tt, dev] = 1
 
-    # injections are the units that read no slot: (p=0, m) on device 0
-    for tt in range(num_ticks):
-        unit = work[tt][0]
-        if unit is not None and unit[0] == 0:
-            assert read_slot[tt, 0] == -1
+    # -- item-feed carousels (one per source) ------------------------------
+    # Source s's items are round-robin sharded with offset dev_s =
+    # inject_positions[s] % D: item i lives on device (i + dev_s) % D, so
+    # after j reverse-ring advances since a reload, device dev_s holds
+    # exactly item base + j.  A per-source single-item register circulates
+    # on the reverse ring (d -> d-1); every D consumptions every device
+    # reloads from its local shard.  Stalls freeze the whole ring (the
+    # advance flag is tick-uniform).  Consumption tick of source s's item
+    # m is the start of unit (p_s, m) on device dev_s — the greedy
+    # scheduler runs a position's units in microbatch order (asserted).
+    num_src = len(inject_positions)
+    inject_devices = tuple(p % d_ for p in inject_positions)
+    src_feed_reload = np.zeros((num_src, num_ticks), np.int32)
+    src_feed_idx = np.zeros((num_src, num_ticks), np.int32)
+    src_consume = np.zeros((num_src, num_ticks), np.int32)
+    for s, (p_s, dev_s) in enumerate(zip(inject_positions, inject_devices)):
+        consumed = 0
+        for tt in range(num_ticks):
+            unit = work[tt][dev_s]
+            if unit is not None and unit[0] == p_s:
+                assert unit[1] == consumed, (
+                    f"source {s} consumed out of order at position {p_s}"
+                )
+                src_consume[s, tt] = 1
+                if consumed % d_ == 0:
+                    src_feed_reload[s, tt] = 1
+                    src_feed_idx[s, tt] = consumed // d_
+                consumed += 1
+        assert consumed == m_
+    src_feed_advance = src_consume.copy()
 
-    # -- item-feed carousel ------------------------------------------------
-    # Items are round-robin sharded: device d holds items {d, d+D, ...}.
-    # A single-item register F circulates on the reverse ring (d -> d-1);
-    # every D consumptions each device reloads F from its local shard, so
-    # item c is on device 0 exactly when the plan injects it.  Stalls
-    # freeze the whole ring (the advance flag is tick-uniform).
-    inject = np.zeros(num_ticks, np.int32)
-    feed_reload = np.zeros(num_ticks, np.int32)
-    feed_idx = np.zeros(num_ticks, np.int32)
-    consumed = 0
+    # Primary-source injections are the units that read no slot.
     for tt in range(num_ticks):
-        unit = work[tt][0]
-        if unit is not None and unit[0] == 0:
-            inject[tt] = 1
-            if consumed % d_ == 0:
-                feed_reload[tt] = 1
-                feed_idx[tt] = consumed // d_
-            consumed += 1
-    feed_advance = inject.copy()
-    assert consumed == m_
+        if src_consume[0, tt]:
+            assert read_slot[tt, 0] == -1
 
     return SchedulePlan(
         name=name,
@@ -326,9 +399,15 @@ def build_plan(
         read_slot=read_slot,
         recv_slot=recv_slot,
         collect=collect,
-        inject=inject,
-        feed_reload=feed_reload,
-        feed_idx=feed_idx,
-        feed_advance=feed_advance,
+        inject=src_consume[0].copy(),
+        feed_reload=src_feed_reload[0],
+        feed_idx=src_feed_idx[0],
+        feed_advance=src_feed_advance[0],
         num_slots=num_slots,
+        inject_positions=tuple(inject_positions),
+        inject_devices=inject_devices,
+        src_feed_reload=src_feed_reload,
+        src_feed_idx=src_feed_idx,
+        src_feed_advance=src_feed_advance,
+        src_consume=src_consume,
     )

@@ -4,25 +4,41 @@ This is the JAX port of the paper's central construct:
 
     class Cons(hd: A, tl: Future[Stream[A]]) extends Stream[A]
 
-A *bounded* stream program is a chain of dependent cells.  Each cell owns
-mutable per-cell state and transforms the item flowing through it::
+**The front door is the combinator algebra** (:mod:`repro.core.graph`)::
+
+    from repro.core import Stream
+
+    Stream.source(items)                 # M items, leading axis = stream
+          .map(f)                        # stateless per-item transform
+          .through(cell_fn, states)      # chain segment of dependent cells
+          .zip(other, combine)           # multi-source item-by-item merge
+          .concat(other)                 # sequential composition
+          .mask(pred)                    # bounded-stream validity tagging
+          .collect(evaluator)            # run -> StreamResult(items, states)
+
+Combinators build a :class:`~repro.core.graph.StreamGraph` IR that both
+evaluators execute.  A chain segment's cell owns mutable per-cell state
+and transforms the item flowing through it::
 
     cell_fn : (state_s, item) -> (state_s', item')
 
-Items (the paper's stream *elements*; in production, microbatches or
-sequence chunks) flow through the cells in order.  The semantics are fixed
-and evaluator-independent:
+The semantics are fixed and evaluator-independent:
 
     item b reaches cell s only after item b-1 has left cell s, and after
-    item b has left cell s-1.
+    item b has left cell s-1; item b of ``x.zip(y, f)`` is
+    ``f(x[b], y[b])`` — source order, never arrival order.
 
 Two evaluators implement these semantics — the paper's Lazy/Future monad
 substitution:
 
-* :class:`LazyEvaluator` — ``lax.scan`` over items and cells on the local
-  device.  Sequential, memoized carry: the Lazy monad.
+* :class:`LazyEvaluator` — topological composition of ``lax.scan``s over
+  the IR on the local device.  Sequential, memoized carry: the Lazy
+  monad.  Executes *any* well-formed graph, including zips whose both
+  sides carry stateful segments.
 * :class:`FutureEvaluator` — a **schedule-pluggable pipeline engine**.
-  Cells are sharded across a mesh axis; a host-built
+  The graph is lowered (:func:`repro.core.graph.lower_chain`) to a spine
+  of fused chain segments plus per-source injection points; cells are
+  sharded across a mesh axis and a host-built
   :class:`repro.core.schedules.SchedulePlan` (``gpipe``, ``one_f_one_b``
   or ``interleaved``) dictates, per tick, which microbatch each device
   advances and through which of its local cell groups.  The inter-stage
@@ -30,26 +46,38 @@ substitution:
   :func:`repro.core.future.ppermute_future`: the collective is *issued
   before* the tick's ``lax.scan`` over local cells and *forced after*
   it, so the permute is in flight during compute (the future is the
-  mechanism, not a metaphor).  Input items are round-robin sharded over
-  the stage axis and delivered to stage 0 by a reverse-ring carousel
-  (no per-stage replication of all M items, no per-tick dynamic
-  gather); outputs accumulate only on the last stage and leave the
-  region as a stage-sharded buffer (no ``psum`` replication — the
-  caller takes the last stage's shard with one static slice).
+  mechanism, not a metaphor).  **Every source** — one per ``zip`` branch
+  — is round-robin sharded over the stage axis (with a rotation offset
+  so its items arrive at its injection device on time) and delivered by
+  its own reverse-ring feed carousel at its own virtual stage: a zip of
+  two sources pipelines with no per-stage replication of either.
+  Outputs accumulate only on the last stage and leave the region as a
+  stage-sharded buffer (no ``psum`` replication — the caller takes the
+  last stage's shard with one static slice).
 
 Both produce bit-identical results (tested, including under hypothesis);
 only the schedule differs.  This mirrors the paper's claim that the
 algorithm text is unchanged when substituting Future for Lazy — and,
 one level up, that the *schedule* can change without touching either.
 
-All constructs (scan, ppermute, where, dynamic slicing, the barrier in
-``force``) are differentiable, so ``jax.grad`` through any schedule
-yields the reversed backward pipeline automatically.
+All constructs (scan, ppermute, switch, where, dynamic slicing, the
+barrier in ``force``) are differentiable, so ``jax.grad`` through any
+schedule yields the reversed backward pipeline automatically.
 
 Unbounded streams do not exist on XLA (shape-static); the paper itself
 bounds the stream in its Future version ("otherwise the computation will
 not stop since it is asynchronous").  We adopt the same concession:
-streams are bounded, with masked validity where needed.
+streams are bounded, with ``.mask`` validity where needed.
+
+**Migration note** — :class:`StreamProgram` survives as a thin
+deprecated adapter over a one-segment graph::
+
+    evaluate(StreamProgram(cell, states, n), items, ev)   # still works
+    Stream.from_program(program, items).collect(ev)       # same thing
+    Stream.source(items).through(cell, states).collect(ev)  # the new way
+
+New code should build streams with the algebra; multi-source programs
+(``zip``/``concat``) have no ``StreamProgram`` spelling.
 """
 from __future__ import annotations
 
@@ -63,7 +91,9 @@ import numpy as np
 from jax import lax
 
 from repro import compat
+from repro.core import graph as G
 from repro.core.future import ppermute_future
+from repro.core.graph import Stream, StreamResult
 from repro.core.schedules import SchedulePlan, build_plan
 
 PyTree = Any
@@ -71,13 +101,19 @@ CellFn = Callable[[PyTree, PyTree], tuple[PyTree, PyTree]]
 
 
 # ---------------------------------------------------------------------------
-# Program
+# Program (deprecated adapter)
 # ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass(frozen=True)
 class StreamProgram:
     """A bounded stream of ``num_cells`` dependent cells.
+
+    .. deprecated::
+        The combinator algebra (:class:`repro.core.graph.Stream`) is the
+        public front door; ``StreamProgram`` remains as an adapter for a
+        one-segment chain (``Stream.from_program``) so existing call
+        sites migrate incrementally.
 
     Attributes:
       cell_fn: ``(state, item) -> (new_state, out_item)``.  Pure.  Applied
@@ -114,27 +150,69 @@ def indexed_states(state: PyTree, num_cells: int) -> PyTree:
     return {"index": jnp.arange(num_cells), "state": state}
 
 
+def _check_program(program, items) -> bool:
+    """Shared Stream/StreamProgram dispatch + item validation.
+
+    Returns True for the legacy StreamProgram form (items validated),
+    False for a Stream (which carries its own sources).
+    """
+    if isinstance(program, Stream):
+        if items is not None:
+            raise ValueError(
+                "a Stream carries its own sources; do not pass items"
+            )
+        return False
+    if isinstance(program, StreamProgram):
+        G.leading_axis_size(items, "items")
+        return True
+    raise TypeError(
+        f"expected Stream or StreamProgram, got {type(program).__name__}"
+    )
+
+
+def _as_chain(program, items) -> tuple[G.ChainProgram, bool]:
+    """Normalize (StreamProgram, items) | Stream into a ChainProgram.
+
+    Returns ``(chain, legacy)`` — legacy callers get the single
+    segment's states back un-tupled.
+    """
+    if _check_program(program, items):
+        return Stream.from_program(program, items).lower(), True
+    return program.lower(), False
+
+
 # ---------------------------------------------------------------------------
 # Lazy evaluator — the Lazy monad (sequential, memoized)
 # ---------------------------------------------------------------------------
 
 
 class LazyEvaluator:
-    """Sequential evaluation: scan items (outer) through cells (inner).
+    """Sequential evaluation: topological lax.scan composition of the IR.
 
     Equivalent to the paper's ``Future(value: => A)`` with ``lazy val``
     memoization — every tail is evaluated exactly once, on demand, on the
-    calling thread.
+    calling thread.  Runs any well-formed graph, including those the
+    pipeline lowering rejects (zips of two stateful pipelines).
     """
 
     name = "lazy"
 
-    def __call__(self, program: StreamProgram, items: PyTree) -> tuple[PyTree, PyTree]:
+    def run_graph(self, stream: Stream) -> StreamResult:
+        outs, states = G.lazy_eval_graph(stream.node)
+        return StreamResult(items=outs, states=states)
+
+    def __call__(self, program, items: PyTree = None) -> tuple[PyTree, PyTree]:
         """Run ``items`` (leading axis = stream of M items) through the chain.
 
         Returns ``(final_states, out_items)`` with ``out_items`` leading
-        axis M (item b after all cells).
+        axis M (item b after all cells).  ``program`` may be a deprecated
+        :class:`StreamProgram` (with ``items``) or a :class:`Stream`
+        (whose sources carry the items; final states are a tuple, one per
+        segment).
         """
+        if not _check_program(program, items):
+            result = self.run_graph(program)
+            return result.states, result.items
 
         cell_fn = (
             jax.checkpoint(program.cell_fn) if program.remat else program.cell_fn
@@ -165,12 +243,17 @@ def _tree_where(pred, a, b):
 class FutureEvaluator:
     """Pipelined evaluation across ``axis_name`` of ``mesh``.
 
-    ``num_cells`` must be divisible by ``D * interleave`` where D is the
-    axis size.  With ``interleave == 1`` device d owns one contiguous
-    group of cells (one stage); with ``interleave == V > 1`` it owns V
-    non-contiguous groups (virtual stages ``v*D + d`` — the interleaved
-    schedule's layout, which keeps every hand-off on the same one-hop
-    ring because virtual stage p+1 always lives on device (d+1) % D).
+    The program (a :class:`Stream` or deprecated :class:`StreamProgram`)
+    is lowered to a :class:`~repro.core.graph.ChainProgram` — a spine of
+    fused chain segments plus one injection point per source.  The total
+    cell count must be divisible by ``D * interleave`` where D is the
+    axis size, and every interior injection (``zip``) must fall on a
+    virtual-stage boundary.  With ``interleave == 1`` device d owns one
+    contiguous group of cells (one stage); with ``interleave == V > 1``
+    it owns V non-contiguous groups (virtual stages ``v*D + d`` — the
+    interleaved schedule's layout, which keeps every hand-off on the same
+    one-hop ring because virtual stage p+1 always lives on device
+    (d+1) % D).
 
     The tick loop executes a :class:`~repro.core.schedules.SchedulePlan`:
 
@@ -179,9 +262,11 @@ class FutureEvaluator:
       ``lax.scan``, then forces the permute anchored on that compute —
       the collective and the scan overlap, and a value produced at tick
       t is consumed at tick t+2 (the plan's ``handoff``);
-    * items are round-robin sharded over the axis (device d holds items
-      ``d, d+D, ...``) and a one-item carousel register rotates them
-      into stage 0 exactly when the plan injects them;
+    * every source is round-robin sharded over the axis with a rotation
+      offset matching its injection device, and a per-source one-item
+      carousel register rotates its items into that device exactly when
+      the plan consumes them — multi-source zips pipeline with no
+      per-stage replication of any source;
     * only the last device writes the output buffer; it is returned
       stage-sharded and the caller slices the final stage's block — no
       collective touches the outs.
@@ -211,29 +296,102 @@ class FutureEvaluator:
         # other mesh axes (data/model) keep automatic GSPMD partitioning,
         # so stages can themselves be FSDP×TP sharded (production mode).
 
-    def plan_for(self, num_microbatches: int) -> SchedulePlan:
+    def plan_for(
+        self, num_microbatches: int, inject_positions: tuple[int, ...] = (0,)
+    ) -> SchedulePlan:
         """The tick plan this evaluator would run for M microbatches."""
         return build_plan(
             self.schedule,
             self.mesh.shape[self.axis_name],
             num_microbatches,
             self.interleave,
+            inject_positions=inject_positions,
         )
 
-    def __call__(self, program: StreamProgram, items: PyTree) -> tuple[PyTree, PyTree]:
+    def run_graph(self, stream: Stream) -> StreamResult:
+        chain = stream.lower()
+        states, outs = self._run_chain(chain)
+        return StreamResult(items=outs, states=states)
+
+    def __call__(self, program, items: PyTree = None) -> tuple[PyTree, PyTree]:
+        chain, legacy = _as_chain(program, items)
+        states, outs = self._run_chain(chain)
+        if legacy:
+            return states[0], outs
+        return states, outs
+
+    # -- chain execution ---------------------------------------------------
+
+    def _run_chain(self, chain: G.ChainProgram) -> tuple[tuple, PyTree]:
         axis = self.axis_name
         num_devices = self.mesh.shape[axis]
         num_virtual = num_devices * self.interleave
-        if program.num_cells % num_virtual != 0:
+        m_ = chain.num_items
+
+        # Segment-free program: pure data plumbing, no pipeline region.
+        if chain.num_cells == 0:
+            feeds = [inj.materialize() for inj in chain.injections]
+            outs = feeds[0]
+            for inj, feed in zip(chain.injections[1:], feeds[1:]):
+                outs = G.apply_per_item(
+                    lambda ab, _c=inj.combine: _c(*ab), (outs, feed)
+                )
+            if chain.finalize is not None:
+                outs = G.apply_per_item(chain.finalize, outs)
+            return (), outs
+
+        if chain.num_cells % num_virtual != 0:
             raise ValueError(
-                f"num_cells={program.num_cells} not divisible by axis "
+                f"num_cells={chain.num_cells} not divisible by axis "
                 f"'{axis}' size {num_devices} x interleave {self.interleave}"
             )
-        cells_per_group = program.num_cells // num_virtual
-        num_items = jax.tree.leaves(items)[0].shape[0]
-        plan = self.plan_for(num_items)
+        cells_per_group = chain.num_cells // num_virtual
+
+        # Injection layout: every zip must land on a virtual-stage
+        # boundary; post-pipeline merges (cell_index == num_cells) are
+        # applied outside the region.
+        pipelined_inj: list[G.ChainInjection] = []
+        tail_inj: list[G.ChainInjection] = []
+        positions: list[int] = []
+        for inj in chain.injections:
+            if inj.cell_index >= chain.num_cells and inj.combine is not None:
+                tail_inj.append(inj)
+                continue
+            if inj.cell_index % cells_per_group != 0:
+                raise ValueError(
+                    f"zip injection at cell {inj.cell_index} does not fall "
+                    f"on a virtual-stage boundary (cells_per_group="
+                    f"{cells_per_group}, D={num_devices}, "
+                    f"V={self.interleave}); move the zip or change the "
+                    f"stage split"
+                )
+            pipelined_inj.append(inj)
+            positions.append(inj.cell_index // cells_per_group)
+
+        plan = self.plan_for(m_, tuple(positions))
         d_, v_, k_ = num_devices, self.interleave, plan.num_slots
-        m_ = num_items
+        n_src = len(pipelined_inj)
+        entry_src = [s for s in range(n_src) if positions[s] == 0]
+        interior_src = [s for s in range(n_src) if positions[s] != 0]
+
+        # One fused chain: raw fast path for a single plain segment (the
+        # common case, and bit/HLO-identical to the pre-algebra engine);
+        # switch-dispatched unified state otherwise.
+        single = (
+            len(chain.segments) == 1 and chain.segments[0].pre_fn is None
+        )
+        if single:
+            seg = chain.segments[0]
+            cell_fn = jax.checkpoint(seg.cell_fn) if seg.remat else seg.cell_fn
+            init_state = seg.init_state
+            mutable = seg.mutable_state
+            split_states = lambda fs: (fs,)
+        else:
+            uni = G.unify_segments(chain.segments)
+            cell_fn = uni.cell_fn
+            init_state = uni.init_state
+            mutable = uni.mutable_state
+            split_states = uni.split_states
 
         # Device-major cell layout: device d's shard holds its V groups
         # back to back (group v = cells of virtual stage v*D + d).  For
@@ -247,25 +405,52 @@ class FutureEvaluator:
             ]
         )
         inv_perm = np.argsort(perm)
-        init_state = program.init_state
         if v_ > 1:
             init_state = jax.tree.map(lambda x: x[perm], init_state)
 
-        # Round-robin item shards: global (D, J, ...) with device d's row
-        # holding items d, d+D, ...; zero-padded when D does not divide M.
+        # Per-source round-robin feed shards: global (D, J, ...) with a
+        # rotation offset so source s's item m sits on its injection
+        # device exactly when the carousel has advanced m times.
         feed_len = math.ceil(m_ / d_)
 
-        def _to_feed(x):
+        def _to_feed(x, offset):
             pad = feed_len * d_ - m_
             if pad:
                 x = jnp.concatenate(
                     [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)]
                 )
-            return jnp.swapaxes(
-                x.reshape((feed_len, d_) + x.shape[1:]), 0, 1
-            )
+            x = x.reshape((feed_len, d_) + x.shape[1:])
+            if offset:
+                x = jnp.roll(x, offset, axis=1)
+            return jnp.swapaxes(x, 0, 1)
 
-        items_fed = jax.tree.map(_to_feed, items)
+        sources = [inj.materialize() for inj in pipelined_inj]
+        feeds_fed = tuple(
+            jax.tree.map(
+                lambda x, _o=plan.inject_devices[s]: _to_feed(x, _o), sources[s]
+            )
+            for s in range(n_src)
+        )
+
+        combines = [inj.combine for inj in pipelined_inj]
+
+        def entry_fold(feed_items):
+            flow = feed_items[0]
+            for s in entry_src[1:]:
+                flow = combines[s](flow, feed_items[s])
+            return flow
+
+        # Flowing item structure: what the entry zips produce (for a
+        # single source, the source's own items).
+        flow_shape = jax.eval_shape(
+            entry_fold,
+            [
+                jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), src
+                )
+                for src in sources
+            ],
+        )
 
         spec_shard = lambda tree: jax.tree.map(
             lambda _: jax.sharding.PartitionSpec(axis), tree
@@ -282,27 +467,37 @@ class FutureEvaluator:
             "rslot": jnp.asarray(plan.read_slot),
             "cslot": jnp.asarray(plan.recv_slot),
             "coll": jnp.asarray(plan.collect),
-            "inj_reload": jnp.asarray(plan.feed_reload),
-            "inj_idx": jnp.asarray(plan.feed_idx),
-            "inj_adv": jnp.asarray(plan.feed_advance),
+            # (num_ticks, num_sources): transposed so scan slices a
+            # per-tick row; the python loop over sources indexes it
+            # statically.
+            "src_reload": jnp.asarray(plan.src_feed_reload.T),
+            "src_idx": jnp.asarray(plan.src_feed_idx.T),
+            "src_adv": jnp.asarray(plan.src_feed_advance.T),
+            "src_consume": jnp.asarray(plan.src_consume.T),
         }
 
-        cell_fn = (
-            jax.checkpoint(program.cell_fn) if program.remat else program.cell_fn
-        )
-        mutable = program.mutable_state
-
-        def pipelined(stage_ids, local_states, local_items):
+        def pipelined(stage_ids, local_states, local_feeds):
             # Stage index arrives as a stage-sharded input rather than
             # lax.axis_index: the latter lowers to PartitionId, which the
             # 0.4.x SPMD partitioner rejects inside partial-manual regions.
             stage = stage_ids[0]
-            local_items = jax.tree.map(lambda x: x[0], local_items)  # (J, ...)
+            local_feeds = [
+                jax.tree.map(lambda x: x[0], f) for f in local_feeds
+            ]  # each (J, ...)
             # The loop carry varies per-device; mark it so (vma JAX).
             def _varying(x):
                 return compat.pcast(x, (axis,), to="varying")
 
-            item_shape = jax.tree.map(lambda x: x[0], local_items)
+            feed_shapes = [
+                jax.tree.map(lambda x: x[0], f) for f in local_feeds
+            ]
+            feed0 = [
+                jax.tree.map(lambda x: _varying(jnp.zeros_like(x)), fs)
+                for fs in feed_shapes
+            ]
+            item_shape = jax.tree.map(
+                lambda x: jnp.zeros(x.shape, x.dtype), flow_shape
+            )
             zero_item = jax.tree.map(
                 lambda x: _varying(jnp.zeros_like(x)), item_shape
             )
@@ -334,37 +529,51 @@ class FutureEvaluator:
                 return new_states, out
 
             def tick(carry, x):
-                states, out_prev, feed, buf, outs = carry
+                states, out_prev, feeds, buf, outs = carry
                 mb = jnp.take(x["mb"], stage)
                 grp = jnp.take(x["grp"], stage)
                 rslot = jnp.take(x["rslot"], stage)
                 cslot = jnp.take(x["cslot"], stage)
                 coll = jnp.take(x["coll"], stage)
 
-                # 1. Issue both collectives *now*; they complete while
+                # 1. Issue all collectives *now*; they complete while
                 # this tick's cell scan runs (forced below).
                 send_fut = ppermute_future(out_prev, axis, fwd_ring)
-                feed_cur = _tree_where(
-                    x["inj_reload"] > 0,
-                    jax.tree.map(
-                        lambda it: lax.dynamic_index_in_dim(
-                            it, x["inj_idx"], keepdims=False
+                feed_curs = []
+                feed_futs = []
+                for s in range(n_src):
+                    fc = _tree_where(
+                        x["src_reload"][s] > 0,
+                        jax.tree.map(
+                            lambda it: lax.dynamic_index_in_dim(
+                                it, x["src_idx"][s], keepdims=False
+                            ),
+                            local_feeds[s],
                         ),
-                        local_items,
-                    ),
-                    feed,
-                )
-                feed_fut = ppermute_future(feed_cur, axis, rev_ring)
+                        feeds[s],
+                    )
+                    feed_curs.append(fc)
+                    feed_futs.append(ppermute_future(fc, axis, rev_ring))
 
-                # 2. Input: a fresh injection (stage 0) or a buffered
-                # future the predecessor emitted `handoff` ticks ago.
+                # 2. Input: a fresh injection (the entry zips' fold over
+                # their feed registers), a buffered future the
+                # predecessor emitted `handoff` ticks ago, or — at an
+                # interior injection device — that value merged with the
+                # consuming zip's source register.
                 slot_val = jax.tree.map(
                     lambda b: lax.dynamic_index_in_dim(
                         b, jnp.clip(rslot, 0, k_ - 1), keepdims=False
                     ),
                     buf,
                 )
-                inp = _tree_where(rslot < 0, feed_cur, slot_val)
+                injected = entry_fold(feed_curs)
+                inp = _tree_where(rslot < 0, injected, slot_val)
+                for s in interior_src:
+                    merged = combines[s](inp, feed_curs[s])
+                    apply_s = (x["src_consume"][s] > 0) & (
+                        stage == plan.inject_devices[s]
+                    )
+                    inp = _tree_where(apply_s, merged, inp)
 
                 # 3. Advance mb through this tick's cell group.
                 if v_ > 1:
@@ -415,7 +624,6 @@ class FutureEvaluator:
                 # 5. Force the futures, anchored on the compute they
                 # overlapped; store the arrival in its planned slot.
                 arrived = send_fut.force(anchor=out)
-                feed_arr = feed_fut.force(anchor=out)
                 slot = jnp.clip(cslot, 0, k_ - 1)
                 buf = jax.tree.map(
                     lambda b, a: lax.dynamic_update_index_in_dim(
@@ -431,10 +639,17 @@ class FutureEvaluator:
                     buf,
                     arrived,
                 )
-                feed = _tree_where(x["inj_adv"] > 0, feed_arr, feed_cur)
-                return (states, out, feed, buf, outs), None
+                new_feeds = tuple(
+                    _tree_where(
+                        x["src_adv"][s] > 0,
+                        feed_futs[s].force(anchor=out),
+                        feed_curs[s],
+                    )
+                    for s in range(n_src)
+                )
+                return (states, out, new_feeds, buf, outs), None
 
-            carry0 = (local_states, zero_item, zero_item, buf0, outs0)
+            carry0 = (local_states, zero_item, tuple(feed0), buf0, outs0)
             (local_states, _, _, _, outs), _ = lax.scan(tick, carry0, xs)
             if v_ > 1:
                 local_states = jax.tree.map(
@@ -449,13 +664,13 @@ class FutureEvaluator:
             in_specs=(
                 jax.sharding.PartitionSpec(axis),
                 spec_shard(init_state),
-                spec_shard(items),
+                tuple(spec_shard(f) for f in feeds_fed),
             ),
-            out_specs=(spec_shard(init_state), spec_shard(items)),
+            out_specs=(spec_shard(init_state), spec_shard(flow_shape)),
             axis_names={axis},
         )
         final_states, outs = pipelined(
-            jnp.arange(d_, dtype=jnp.int32), init_state, items_fed
+            jnp.arange(d_, dtype=jnp.int32), init_state, feeds_fed
         )
         if v_ > 1:
             final_states = jax.tree.map(lambda x: x[inv_perm], final_states)
@@ -465,14 +680,26 @@ class FutureEvaluator:
             lambda o: lax.slice_in_dim(o, (d_ - 1) * m_, d_ * m_, axis=0),
             outs,
         )
-        return final_states, outs
+        # Post-pipeline merges (zips past the last cell) and fused tail
+        # maps apply per item outside the region.
+        for inj in tail_inj:
+            outs = G.apply_per_item(
+                lambda ab, _c=inj.combine: _c(*ab), (outs, inj.materialize())
+            )
+        if chain.finalize is not None:
+            outs = G.apply_per_item(chain.finalize, outs)
+        return split_states(final_states), outs
 
 
 def evaluate(
-    program: StreamProgram,
-    items: PyTree,
+    program,
+    items: PyTree = None,
     evaluator: LazyEvaluator | FutureEvaluator | None = None,
 ) -> tuple[PyTree, PyTree]:
-    """Monad-substitution entry point: same program, pluggable evaluator."""
+    """Monad-substitution entry point: same program, pluggable evaluator.
+
+    ``program`` is a :class:`Stream` (preferred; carries its own sources)
+    or a deprecated :class:`StreamProgram` with ``items``.
+    """
     evaluator = evaluator or LazyEvaluator()
     return evaluator(program, items)

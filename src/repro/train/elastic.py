@@ -1,4 +1,4 @@
-"""Elastic scaling: re-mesh and re-shard on device-count change.
+"""Elastic scaling: re-mesh, re-plan the schedule, re-shard on change.
 
 When a pod is cordoned (hardware fault) or capacity is added, the job
 resumes on a different device count.  Because checkpoints are stored as
@@ -12,6 +12,14 @@ to any topology.
 remaining device for data parallelism; global batch is kept constant by
 adjusting ``num_microbatches`` (the stream chunk count — the paper's knob
 again) so per-device microbatch size stays fixed.
+
+``choose_elastic_plan`` goes further for pipelined jobs: the pipeline
+schedule is **mesh-shape-dependent** — schedule, M and V all move with
+the pipeline axis size (a deep pipeline wants interleaving to cut the
+fill/drain bubble; a shallow one wants plain fill/drain with cheap
+ticks) — so on node loss it re-runs
+:func:`repro.core.chunking.optimal_schedule` against the shrunken axis
+instead of only re-deriving the mesh.
 """
 from __future__ import annotations
 
@@ -20,6 +28,8 @@ import dataclasses
 import jax
 import numpy as np
 
+from repro.core import chunking
+from repro.core.chunking import ScheduleChoice
 from repro.parallel.sharding import param_shardings
 
 
@@ -28,6 +38,9 @@ class ElasticPlan:
     mesh_shape: tuple[int, ...]
     axis_names: tuple[str, ...]
     num_microbatches: int
+    # Joint (schedule, M, V) re-plan for the pipeline axis; None when the
+    # job is not pipelined (pipeline axis of 1).
+    schedule: ScheduleChoice | None = None
 
 
 def choose_mesh_shape(
@@ -44,6 +57,61 @@ def choose_mesh_shape(
     while global_batch % (num_micro) != 0:
         num_micro -= 1
     return ElasticPlan((data, model), ("data", "model"), num_micro)
+
+
+def choose_elastic_plan(
+    num_devices: int,
+    *,
+    preferred_model: int = 16,
+    preferred_pipeline: int = 1,
+    global_batch: int = 256,
+    work_per_item: float = 1.0,
+    per_tick_overhead: float = 1e-4,
+    memory_budget_items: float | None = None,
+    num_sources: int = 1,
+) -> ElasticPlan:
+    """Mesh factorization *and* schedule re-plan for the new device count.
+
+    The pipeline axis shrinks to the largest power-of-two divisor of
+    ``num_devices`` at most ``preferred_pipeline``; the remaining devices
+    factor into (data, model) as :func:`choose_mesh_shape` does.  With a
+    pipeline axis > 1 the (schedule, M, V) triple is re-derived by
+    :func:`repro.core.chunking.optimal_schedule` — on a pod loss the
+    optimum genuinely moves (e.g. a deep pipeline's interleaved schedule
+    degrades to plain fill/drain when the axis halves), so re-deriving
+    only the mesh silently runs the wrong schedule.  ``num_sources``
+    forwards multi-injection feed costs into the memory budget.
+    """
+    pipe = 1
+    while pipe * 2 <= preferred_pipeline and num_devices % (pipe * 2) == 0:
+        pipe *= 2
+    rest = num_devices // pipe
+    base = choose_mesh_shape(rest, preferred_model, global_batch)
+    if pipe <= 1:
+        return ElasticPlan(
+            base.mesh_shape + (1,),
+            base.axis_names + ("pipe",),
+            base.num_microbatches,
+            schedule=None,
+        )
+    # M is constrained to divide the global batch *inside* the search, so
+    # the returned choice's modeled time and budget check describe the M
+    # the plan actually runs.
+    choice = chunking.optimal_schedule(
+        work_per_item,
+        pipe,
+        per_tick_overhead,
+        max_chunks=global_batch,
+        memory_budget_items=memory_budget_items,
+        num_sources=num_sources,
+        chunks_divide=global_batch,
+    )
+    return ElasticPlan(
+        base.mesh_shape + (pipe,),
+        base.axis_names + ("pipe",),
+        choice.num_chunks,
+        schedule=choice,
+    )
 
 
 def remesh_state(state, layout, rules, new_mesh):

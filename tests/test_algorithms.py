@@ -2,6 +2,7 @@
 import pytest
 
 from _hypothesis_stub import hypothesis, st  # skips @given tests offline
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -90,6 +91,22 @@ class TestPolynomial:
     def test_key_packing_roundtrip(self):
         for e in [(0, 0, 0), (5, 3, 1), (40, 40, 40)]:
             assert poly.unpack_key(poly.pack_key(e)) == e
+
+    def test_times_into_under_jit(self):
+        # the accumulator seeding must stay traceable: z arrives as a
+        # tracer when the fused multiply-add is jitted like times is
+        tx, tz = {(1, 0, 0): 3, (0, 2, 0): 5}, {(2, 2, 0): 7}
+        x = poly.from_dict(tx, 8, 8)
+        z = poly.from_dict(tz, 8, 8)
+        fma = jax.jit(
+            lambda z_: poly.times_into(
+                x, x, z_, num_x_chunks=4, terms_per_cell=2, acc_capacity=256
+            )
+        )
+        ref = poly.reference_product(tx, tx)
+        for k, v in tz.items():
+            ref[k] = ref.get(k, 0) + v
+        assert poly.to_dict(fma(z)) == ref
 
 
 class TestSieve:

@@ -19,7 +19,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np
 from functools import partial
 from repro import compat
-from repro.core import (FutureEvaluator, LazyEvaluator, StreamProgram,
+from repro.core import (FutureEvaluator, LazyEvaluator, Stream, StreamProgram,
                         PipelineConfig, evaluate, pipeline_apply, split_stages)
 from repro.algorithms import sieve, polynomial as poly
 
@@ -113,6 +113,79 @@ got5 = poly.to_dict(poly.times(x5, x5, evaluator=fut, num_x_chunks=4,
                                terms_per_cell=5, acc_capacity=256))
 print("POLY", got5 == ref5)
 
+# 5b. the combinator algebra: every combinator, Lazy == Future *bitwise*
+# across the schedule zoo (map fusion, entry zip, interior zip, concat,
+# mask, chained segments)
+a7 = jnp.linspace(0, 1, 18).reshape(6, 3)
+b7 = jnp.linspace(1, 2, 18).reshape(6, 3)
+w8 = jnp.arange(8, dtype=jnp.float32)
+w4a = jnp.arange(4, dtype=jnp.float32)
+w4b = jnp.linspace(0.5, 1.5, 4)
+cell2 = lambda w, x: (w, jnp.tanh(x * w))
+PROGRAMS = {
+    "map": Stream.source(a7).map(lambda x: x * 2.0).through(cell, w8)
+        .map(lambda x: x + 1.0),
+    "zip_entry": Stream.source(a7)
+        .zip(Stream.source(b7), lambda x, y: x * y).through(cell, w8),
+    "zip_mid": Stream.source(a7).through(cell, w4a)
+        .zip(Stream.source(b7), lambda f, s: f + s)
+        .through(cell2, w4b, mutable_state=False),
+    "concat": Stream.source(a7[:3]).concat(Stream.source(a7[3:]))
+        .through(cell, w8),
+    "mask": Stream.source(a7).mask(lambda v: v > 0.3)
+        .map(lambda d: d["value"] * d["valid"].astype(jnp.float32))
+        .through(cell, w8),
+    "two_seg": Stream.source(a7).through(cell, w4a)
+        .through(cell2, w4b, mutable_state=False),
+    # structure-preserving map between segments: fuses into the downstream
+    # segment's pre_fn, the lax.cond(pos==0) path in unify_segments
+    "mid_map": Stream.source(a7).through(cell, w4a)
+        .map(lambda x: x * 0.5 + 0.1)
+        .through(cell2, w4b, mutable_state=False),
+}
+ok = True
+for pname, sprog in PROGRAMS.items():
+    rl = sprog.collect(LazyEvaluator())
+    for name, v in ZOO:
+        ev = FutureEvaluator(mesh, "pod", schedule=name, interleave=v)
+        rf = sprog.collect(ev)
+        same = all(bool(jnp.all(x == y)) for x, y in
+                   zip(jax.tree.leaves(rl.items), jax.tree.leaves(rf.items)))
+        same &= all(bool(jnp.all(x == y)) for x, y in
+                    zip(jax.tree.leaves(rl.states), jax.tree.leaves(rf.states)))
+        if not same:
+            print("# algebra mismatch:", pname, name)
+        ok &= same
+print("ALGEBRA_ZOO", ok)
+
+# 5c. polynomial multiplication as a genuine two-source zip: bit-identical
+# Lazy vs Future on every schedule, both sources injected through the
+# generalized carousel — no replication collective in the lowered HLO
+x7 = poly.fateman_poly(3, 24, 6)  # 8 cells at G=3: divisible for V=2
+mkst = lambda: poly.times_stream(x7, x7, num_x_chunks=4, terms_per_cell=3,
+                                 acc_capacity=256)
+rl7 = mkst().collect(LazyEvaluator())
+okp = True
+for name, v in ZOO:
+    ev = FutureEvaluator(mesh, "pod", schedule=name, interleave=v)
+    rf7 = mkst().collect(ev)
+    okp &= all(bool(jnp.all(x == y)) for x, y in
+               zip(jax.tree.leaves(rl7.items), jax.tree.leaves(rf7.items)))
+print("POLY_ZIP_ZOO", okp)
+assert len(mkst().lower().injections) == 2  # two real sources, one zip
+hlo7 = jax.jit(lambda: mkst().collect(fut).items).lower().compile().as_text()
+print("POLY_ZIP_NO_REPLICATION",
+      ("all-reduce" not in hlo7) and ("all-gather" not in hlo7))
+
+# 5d. fused multiply-add x*y + z rides the accumulator source
+z7 = poly.from_dict({(1, 2, 3): 7, (0, 0, 1): 5}, 8, 6)
+fma = poly.to_dict(poly.times_into(x7, x7, z7, evaluator=fut, num_x_chunks=4,
+                                   terms_per_cell=3, acc_capacity=256))
+want7 = dict(poly.reference_product(poly.to_dict(x7), poly.to_dict(x7)))
+for k, vv in poly.to_dict(z7).items():
+    want7[k] = want7.get(k, 0) + vv
+print("POLY_FMA", fma == {k: v for k, v in want7.items() if v})
+
 # 6. sharded train step on a 2x2 (data, model) mesh
 from repro.configs.registry import get_config, smoke_config
 from repro.models import transformer as T
@@ -187,6 +260,22 @@ def test_sieve_future(report):
 
 def test_polynomial_future(report):
     assert report["POLY"].startswith("True")
+
+
+def test_algebra_combinators_bitwise_across_schedules(report):
+    assert report["ALGEBRA_ZOO"].startswith("True")
+
+
+def test_polynomial_two_source_zip_across_schedules(report):
+    assert report["POLY_ZIP_ZOO"].startswith("True")
+
+
+def test_polynomial_zip_sources_not_replicated(report):
+    assert report["POLY_ZIP_NO_REPLICATION"].startswith("True")
+
+
+def test_polynomial_fused_multiply_add(report):
+    assert report["POLY_FMA"].startswith("True")
 
 
 def test_sharded_train_matches_unsharded(report):

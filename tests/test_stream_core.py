@@ -15,6 +15,7 @@ from repro.core import (
     chunk_axis,
     defer,
     evaluate,
+    feed_peak_items,
     optimal_num_chunks,
     optimal_schedule,
     pipeline_step_time,
@@ -196,6 +197,105 @@ class TestSchedulePlans:
             build_plan("zigzag", 4, 8)
         with pytest.raises(ValueError):
             build_plan("gpipe", 4, 8, interleave=2)
+
+
+class TestMultiInjectionPlans:
+    """The generalized feed carousel: per-source columns for multi-source
+    streams injecting at arbitrary virtual-stage boundaries."""
+
+    GRID = [
+        ("gpipe", 4, 8, 1, (0, 2)),
+        ("gpipe", 4, 5, 1, (0, 0, 3)),
+        ("one_f_one_b", 4, 8, 1, (0, 1)),
+        ("interleaved", 4, 8, 2, (0, 5)),
+        ("interleaved", 2, 6, 3, (0, 4)),
+    ]
+
+    def test_injections_never_change_the_makespan(self):
+        for name, d, m, v, pos in self.GRID:
+            plain = build_plan(name, d, m, v)
+            multi = build_plan(name, d, m, v, inject_positions=pos)
+            assert multi.num_ticks == plain.num_ticks, (name, d, m, v, pos)
+            np.testing.assert_array_equal(multi.microbatch, plain.microbatch)
+
+    def test_each_source_consumed_exactly_m_times(self):
+        for name, d, m, v, pos in self.GRID:
+            plan = build_plan(name, d, m, v, inject_positions=pos)
+            assert plan.num_sources == len(pos)
+            np.testing.assert_array_equal(
+                plan.src_consume.sum(axis=1), [m] * len(pos)
+            )
+
+    def test_reload_every_dth_consumption(self):
+        for name, d, m, v, pos in self.GRID:
+            plan = build_plan(name, d, m, v, inject_positions=pos)
+            for s in range(len(pos)):
+                # reloads happen on consumptions 0, D, 2D, ...
+                assert plan.src_feed_reload[s].sum() == -(-m // d)
+                ticks = np.nonzero(plan.src_feed_reload[s])[0]
+                np.testing.assert_array_equal(
+                    plan.src_feed_idx[s][ticks], np.arange(len(ticks))
+                )
+
+    def test_inject_devices_follow_positions(self):
+        plan = build_plan("interleaved", 4, 8, 2, inject_positions=(0, 5))
+        assert plan.inject_devices == (0, 1)  # virtual stage 5 on device 1
+
+    def test_legacy_columns_alias_source_zero(self):
+        plan = build_plan("gpipe", 4, 8, inject_positions=(0, 2))
+        np.testing.assert_array_equal(plan.feed_reload, plan.src_feed_reload[0])
+        np.testing.assert_array_equal(plan.feed_idx, plan.src_feed_idx[0])
+        np.testing.assert_array_equal(plan.feed_advance, plan.src_feed_advance[0])
+        np.testing.assert_array_equal(plan.inject, plan.src_consume[0])
+
+    def test_position_validation(self):
+        with pytest.raises(ValueError, match="chain entry"):
+            build_plan("gpipe", 4, 8, inject_positions=(1,))
+        with pytest.raises(ValueError, match="outside"):
+            build_plan("gpipe", 4, 8, inject_positions=(0, 4))
+        with pytest.raises(ValueError, match="outside"):
+            build_plan("interleaved", 4, 8, 2, inject_positions=(0, 8))
+
+    def test_plan_peak_charges_its_own_sources(self):
+        # the plan's self-reported peak must use the same multi-source
+        # model optimal_schedule budgets against
+        single = build_plan("gpipe", 4, 8)
+        multi = build_plan("gpipe", 4, 8, inject_positions=(0, 2))
+        assert single.peak_inflight_items == 8
+        assert multi.peak_inflight_items == schedule_peak_items(
+            "gpipe", 4, 8, num_sources=2
+        )
+        assert multi.peak_inflight_items > single.peak_inflight_items
+
+    def test_feed_memory_terms(self):
+        # one source: shard + register; each extra source adds the same
+        assert feed_peak_items(4, 8, 1) == 3
+        assert feed_peak_items(4, 8, 2) == 6
+        assert feed_peak_items(4, 5, 2) == 2 * (2 + 1)
+        with pytest.raises(ValueError):
+            feed_peak_items(4, 8, 0)
+        # schedule peak charges extra sources' feeds, primary grandfathered
+        base = schedule_peak_items("one_f_one_b", 4, 16)
+        multi = schedule_peak_items("one_f_one_b", 4, 16, num_sources=3)
+        assert multi == base + 2 * (4 + 1)
+
+    def test_multi_source_budget_shifts_choice(self):
+        # same regime, but feed storage charged against the budget: more
+        # sources must never *relax* the constraint
+        one = optimal_schedule(
+            1.0, 8, 1e-4, max_chunks=256, memory_budget_items=0.6
+        )
+        many = optimal_schedule(
+            1.0, 8, 1e-4, max_chunks=256, memory_budget_items=0.6, num_sources=4
+        )
+        assert many.peak_items >= one.peak_items
+        assert (
+            schedule_peak_items(
+                many.schedule, 8, many.num_chunks, many.interleave, 4
+            )
+            / many.num_chunks
+            <= 0.6
+        )
 
 
 class TestFutureCombinators:
