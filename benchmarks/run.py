@@ -31,6 +31,7 @@ from benchmarks import (
     bench_polymul,
     bench_primes,
     bench_roofline,
+    bench_serve,
 )
 
 SUITES = {
@@ -39,13 +40,14 @@ SUITES = {
     "chunking": bench_chunking,  # §7 proposal
     "pipeline": bench_pipeline,  # bubble model (DESIGN §2)
     "roofline": bench_roofline,  # §Roofline table from dry-run artifacts
+    "serve": bench_serve,        # Stream-shaped serving (tok/s + TTFT)
 }
 
-BASELINE_PATH = os.path.normpath(
-    os.path.join(
-        os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_pipeline.json"
-    )
+_ROOT = os.path.normpath(
+    os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
 )
+BASELINE_PATH = os.path.join(_ROOT, "BENCH_pipeline.json")
+SERVE_BASELINE_PATH = os.path.join(_ROOT, "BENCH_serve.json")
 
 
 def _cell_key(record: dict) -> tuple:
@@ -60,35 +62,88 @@ def _cell_key(record: dict) -> tuple:
     )
 
 
+def _regressions(
+    baseline: list[dict],
+    fresh: list[dict],
+    key_fn,
+    metric: str,
+    tolerance: float,
+    higher_is_better: bool,
+    report_fields: tuple[str, ...],
+) -> list[dict]:
+    """Generic directional gate: cells present in both sweeps whose
+    ``metric`` moved the wrong way past ``tolerance``.  One compare
+    loop serves wall-clock (lower is better) and throughput (higher is
+    better) gates; pure so both are unit-testable offline."""
+    base = {key_fn(r): r[metric] for r in baseline if metric in r}
+    regressions = []
+    for rec in fresh:
+        if metric not in rec:
+            continue
+        key = key_fn(rec)
+        if key not in base:
+            continue
+        before, after = base[key], rec[metric]
+        bad = (
+            after < before * (1.0 - tolerance)
+            if higher_is_better
+            else after > before * (1.0 + tolerance)
+        )
+        if bad:
+            out = {f: rec[f] for f in report_fields if f in rec}
+            out[f"baseline_{metric}"] = before
+            out[f"measured_{metric}"] = after
+            out["ratio"] = after / before
+            regressions.append(out)
+    return regressions
+
+
 def check_regressions(
     baseline: list[dict], fresh: list[dict], tolerance: float
 ) -> list[dict]:
-    """Cells whose measured wall-clock regressed past ``tolerance``.
+    """Pipeline cells whose measured wall-clock regressed past
+    ``tolerance``.  Compares only cells present in both sweeps with
+    identical problem sizes (so a --check quick run never diffs against
+    a --full baseline)."""
+    out = _regressions(
+        baseline, fresh, _cell_key, "measured_seconds", tolerance,
+        higher_is_better=False,
+        report_fields=("schedule", "devices", "interleave", "num_microbatches"),
+    )
+    for r in out:  # keep the historical report-field names
+        r["baseline_seconds"] = r.pop("baseline_measured_seconds")
+        r["measured_seconds"] = r["measured_measured_seconds"]
+        del r["measured_measured_seconds"]
+    return out
 
-    Compares only cells present in both sweeps with identical problem
-    sizes (so a --check quick run never diffs against a --full
-    baseline).  Pure so the gate is unit-testable offline.
-    """
-    base = {_cell_key(r): r["measured_seconds"] for r in baseline}
-    regressions = []
-    for rec in fresh:
-        key = _cell_key(rec)
-        if key not in base:
-            continue
-        before, after = base[key], rec["measured_seconds"]
-        if after > before * (1.0 + tolerance):
-            regressions.append(
-                {
-                    "schedule": rec["schedule"],
-                    "devices": rec["devices"],
-                    "interleave": rec["interleave"],
-                    "num_microbatches": rec["num_microbatches"],
-                    "baseline_seconds": before,
-                    "measured_seconds": after,
-                    "ratio": after / before,
-                }
-            )
-    return regressions
+
+def _serve_cell_key(record: dict) -> tuple:
+    """Identity of one serve sweep cell."""
+    return (
+        record.get("engine"),
+        record.get("schedule"),
+        record.get("devices"),
+        record.get("interleave"),
+        record.get("batch"),
+        record.get("dim"),
+        record.get("max_new"),
+    )
+
+
+def check_serve_regressions(
+    baseline: list[dict], fresh: list[dict], tolerance: float
+) -> list[dict]:
+    """Serve cells whose tokens/sec regressed past ``tolerance`` —
+    the throughput-directional (higher is better) instance of the
+    shared gate."""
+    out = _regressions(
+        baseline, fresh, _serve_cell_key, "tokens_per_sec", tolerance,
+        higher_is_better=True, report_fields=("engine", "batch"),
+    )
+    for r in out:
+        r["baseline_tok_s"] = r.pop("baseline_tokens_per_sec")
+        r["measured_tok_s"] = r.pop("measured_tokens_per_sec")
+    return out
 
 
 def run_check(tolerance: float, full: bool) -> int:
@@ -124,13 +179,50 @@ def run_check(tolerance: float, full: bool) -> int:
     if not compared:
         print("# --check: no comparable cells (size mismatch?)", file=sys.stderr)
         return 2
-    return 1 if regressions else 0
+    rc = 1 if regressions else 0
+    # Serve gate rides along whenever its baseline exists.
+    if os.path.exists(SERVE_BASELINE_PATH):
+        with open(SERVE_BASELINE_PATH) as f:
+            serve_base = json.load(f)["sweep"]
+        for row in bench_serve.run(quick=not full):
+            print(row)
+        serve_fresh = getattr(bench_serve.run, "records", [])
+        serve_compared = {
+            _serve_cell_key(r) for r in serve_fresh if "tokens_per_sec" in r
+        } & {_serve_cell_key(r) for r in serve_base if "tokens_per_sec" in r}
+        serve_reg = check_serve_regressions(serve_base, serve_fresh, tolerance)
+        print(
+            f"# --check serve: {len(serve_compared)} cells compared, "
+            f"{len(serve_reg)} regressed beyond {tolerance:.0%}",
+            file=sys.stderr,
+        )
+        if not serve_compared:
+            print(
+                "# --check serve: no comparable cells (size mismatch?)",
+                file=sys.stderr,
+            )
+            # an already-detected pipeline regression (rc=1) outranks
+            # the serve gate's "couldn't compare" signal
+            return rc or 2
+        for r in serve_reg:
+            print(
+                f"# REGRESSION serve {r['engine']} b={r['batch']}: "
+                f"{r['baseline_tok_s']:.1f} -> {r['measured_tok_s']:.1f} "
+                f"tok/s ({r['ratio']:.2f}x)",
+                file=sys.stderr,
+            )
+        rc = rc or (1 if serve_reg else 0)
+    return rc
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale sizes")
     ap.add_argument("--only", default=None, help="comma-separated suite names")
+    ap.add_argument(
+        "--suite", default=None,
+        help="alias of --only (e.g. --suite serve)",
+    )
     ap.add_argument(
         "--check",
         action="store_true",
@@ -148,7 +240,8 @@ def main() -> None:
     if args.check:
         raise SystemExit(run_check(args.check_tolerance, args.full))
 
-    names = args.only.split(",") if args.only else list(SUITES)
+    only = args.only or args.suite
+    names = only.split(",") if only else list(SUITES)
     print("name,us_per_call,derived")
     failed = []
     for name in names:
@@ -158,7 +251,14 @@ def main() -> None:
                 print(row)
             sys.stdout.flush()
             if name == "pipeline":
-                _write_pipeline_baseline(getattr(SUITES[name].run, "records", []))
+                _write_baseline(
+                    BASELINE_PATH, getattr(SUITES[name].run, "records", [])
+                )
+            elif name == "serve":
+                _write_baseline(
+                    SERVE_BASELINE_PATH,
+                    getattr(SUITES[name].run, "records", []),
+                )
         except Exception as e:  # noqa: BLE001
             failed.append((name, e))
             traceback.print_exc()
@@ -166,12 +266,12 @@ def main() -> None:
         raise SystemExit(f"benchmark suites failed: {[n for n, _ in failed]}")
 
 
-def _write_pipeline_baseline(records: list) -> None:
+def _write_baseline(path: str, records: list) -> None:
     if not records:
         return
-    with open(BASELINE_PATH, "w") as f:
+    with open(path, "w") as f:
         json.dump({"sweep": records}, f, indent=2)
-    print(f"# wrote {BASELINE_PATH}", file=sys.stderr)
+    print(f"# wrote {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

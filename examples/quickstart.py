@@ -76,6 +76,18 @@ def main():
         print("(single device: set XLA_FLAGS=--xla_force_host_platform_"
               "device_count=4 to see the Future evaluator)")
 
+    # --- 1c. Feedback: a self-feeding stream (the serving decode shape) ----
+    # Item b re-enters as emit(item b - lag): this is a decode loop —
+    # the emitted token is the next step's input, per-cell state is the
+    # KV cache, and `lag` in-flight items keep a pipeline busy.
+    lag = 4
+    fb = (
+        Stream.feedback(items[:lag], num_items=12, emit=lambda x: x * 0.5 + 0.1)
+        .through(cell_fn, states)
+    )
+    fb_lazy = fb.collect(LazyEvaluator())
+    print("feedback: outs[-1] =", np.asarray(fb_lazy.items[-1]))
+
     # --- 2. The paper's §7 chunking rule -----------------------------------
     print(
         "optimal #chunks for work=1s, 4 stages, 1ms overhead:",
@@ -86,6 +98,33 @@ def main():
     primes, count = sieve.run_sieve(200, block_size=64, primes_per_cell=4)
     primes = np.asarray(primes)
     print(f"primes < 200 ({int(count)}):", primes[primes > 0])
+
+    # --- 4. Stream-shaped serving: decode as a feedback program ------------
+    # The serving engine is the same construct at production scale: the
+    # transformer's layer groups are the cells (each owning its KV-cache
+    # shard as per-cell state), in-flight request microbatches are the
+    # items, and the emit (logits -> sample -> re-embed) closes the
+    # loop.  StreamEngine runs it under LazyEvaluator here; give it a
+    # mesh and it pipelines across devices (gpipe / interleaved),
+    # bit-identically.
+    from repro.configs.base import DecodePipelineConfig
+    from repro.configs.registry import get_config, smoke_config
+    from repro.models import transformer as T
+    from repro.models.params import init_params
+    from repro.serve.engine import ServeConfig, StreamEngine
+
+    cfg = smoke_config(get_config("olmo-1b")).with_overrides(num_layers=4)
+    params = init_params(jax.random.PRNGKey(0), T.model_layout(cfg))
+    eng = StreamEngine(
+        params, cfg,
+        ServeConfig(max_batch=4, max_len=64, prefill_chunk=8, max_new_tokens=6),
+        DecodePipelineConfig(num_cells=4, microbatches=2, round_steps=4),
+        mesh=None,  # pass a 1-axis mesh to pipeline the cells across it
+    )
+    reqs = [eng.submit(np.array([5, 9, 2, 7])), eng.submit(np.array([3, 1]))]
+    eng.run_until_drained()
+    for r in reqs:
+        print(f"served req {r.uid}: {r.out_tokens}")
 
 
 if __name__ == "__main__":

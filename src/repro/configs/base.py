@@ -83,6 +83,28 @@ class ArchConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class DecodePipelineConfig:
+    """Stream-shaped serving knobs (see repro.serve.engine.StreamEngine).
+
+    The decode loop runs as a ``Stream.feedback`` program: the
+    transformer's layer groups split into ``num_cells`` pipeline cells,
+    the batch splits into ``microbatches`` in-flight items (the feedback
+    lag — steady state is bubble-free when it reaches handoff x devices),
+    and one device program executes ``round_steps`` decode steps with up
+    to ``admit_per_round`` freshly prefilled requests admitted into
+    retired slots *inside* the plan.
+    """
+
+    num_cells: int = 4        # layer-group pipeline cells (must divide groups)
+    microbatches: int = 4     # in-flight request microbatches = feedback lag
+    schedule: str = "gpipe"   # gpipe | one_f_one_b | interleaved
+    interleave: int = 1       # virtual stages per device (interleaved only)
+    round_steps: int = 8      # decode steps per device-program invocation
+    admit_per_round: int = 4  # in-plan admission buffer depth
+    axis_name: str = "pod"    # mesh axis the cells shard over
+
+
+@dataclasses.dataclass(frozen=True)
 class ShapeCell:
     name: str
     seq_len: int

@@ -5,6 +5,9 @@ Public API:
     Stream.source(items).map(f).through(cell_fn, states)
           .zip(other, combine).concat(other).mask(pred)
           .collect(evaluator)
+    Stream.feedback(init, n, emit) — the unfold combinator: item b
+          re-enters as emit(item b - lag); persistent feedback plans
+          (schedules.build_plan(feedback_lag=...)) pipeline it
   LazyEvaluator, FutureEvaluator, evaluate — the substitutable monads
   StreamGraph IR internals (repro.core.graph): lower_chain, ChainProgram
   StreamProgram — deprecated single-chain adapter; migrate via

@@ -14,10 +14,27 @@ single linear chain:
           .mask(pred)               # bounded-stream validity tagging
           .collect(evaluator)       # run it
 
+    Stream.feedback(init, n, emit)  # a self-feeding (unfold) source:
+          .through(cell_fn, states) # item b >= lag re-enters as
+          .collect(evaluator)       # emit(item b-lag after the chain)
+
 Combinators build a typed **StreamGraph IR** — a DAG of
 :class:`SourceNode` / :class:`MapNode` / :class:`SegmentNode` /
-:class:`ZipNode` / :class:`ConcatNode` / :class:`MaskNode` — validated at
-construction (item counts, state shapes, pytree structure for ``concat``).
+:class:`ZipNode` / :class:`ConcatNode` / :class:`MaskNode` /
+:class:`FeedbackNode` — validated at construction (item counts, state
+shapes, pytree structure for ``concat``).
+
+``Stream.feedback`` is the unfold/feedback combinator: the stream's
+item ``b`` (for ``b >= lag``) is not read from a source — it is
+``emit(o)`` where ``o`` is item ``b - lag``'s output *after the whole
+downstream chain*.  This is what a serving decode loop is: the sampled
+token re-enters as the next item, KV-cache rows ride in the chain's
+per-cell state, and ``lag`` (the number of in-flight microbatches)
+is what keeps a pipeline of dependent steps busy.  Feedback graphs
+have no node-local evaluation order, so :func:`lazy_eval_graph`
+rejects them; both evaluators run them through the lowered
+:class:`ChainProgram` (:func:`run_chain_sequential` is the sequential
+reference executor).
 Adjacent ``map``s fuse at construction (``s.map(f).map(g)`` builds the
 same one-node IR as ``s.map(g ∘ f)``), the first of the algebra's laws
 tested in ``tests/test_stream_algebra.py``.
@@ -175,6 +192,25 @@ class SegmentNode(Node):
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
+class FeedbackNode(Node):
+    """A self-feeding source: the unfold combinator.
+
+    The first ``lag`` items are ``init_items``; item ``b >= lag`` is
+    ``emit(out[b - lag])`` where ``out[j]`` is item ``j``'s value after
+    the *entire* downstream chain.  ``emit`` must preserve the flowing
+    item structure (the fed-back value travels the same shape-static
+    ring buffers as every inter-cell hand-off), and the emitted item is
+    also the collected output item — under feedback the stream's
+    outputs *are* what re-enters it.
+    """
+
+    init_items: PyTree
+    num_items: int
+    lag: int
+    emit: Callable[[PyTree], PyTree]
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
 class ZipNode(Node):
     left: Node
     right: Node
@@ -214,6 +250,8 @@ def _inputs(node: Node) -> tuple[Node, ...]:
 
 def _num_items(node: Node) -> int:
     if isinstance(node, SourceNode):
+        return node.num_items
+    if isinstance(node, FeedbackNode):
         return node.num_items
     if isinstance(node, (MapNode, MaskNode, SegmentNode)):
         return _num_items(node.upstream)
@@ -263,13 +301,50 @@ class Stream:
         return Stream(SourceNode(items=items, num_items=m))
 
     @staticmethod
+    def feedback(
+        init_items: PyTree,
+        num_items: int,
+        emit: Callable[[PyTree], PyTree],
+    ) -> "Stream":
+        """A self-feeding stream (the unfold combinator).
+
+        ``init_items`` (leading axis = ``lag``) are the first ``lag``
+        inputs; item ``b >= lag`` is ``emit(out[b - lag])``, where
+        ``out[j]`` is item ``j`` after the whole downstream chain.  The
+        emitted item is also the collected output item, so ``emit`` must
+        be structure-preserving on the flowing item.  ``lag`` is the
+        feedback depth — for a pipelined decode loop, the number of
+        independent in-flight microbatches that keeps the stages busy
+        while each one's next step waits on its own previous output.
+        """
+        lag = leading_axis_size(init_items, "feedback init_items")
+        if num_items < lag:
+            raise ValueError(
+                f"feedback num_items={num_items} must be >= lag={lag} "
+                "(the init items are the first lag items of the stream)"
+            )
+        return Stream(
+            FeedbackNode(
+                init_items=init_items, num_items=num_items, lag=lag, emit=emit
+            )
+        )
+
+    @staticmethod
     def from_program(program, items: PyTree) -> "Stream":
         """Adapter for the deprecated single-chain :class:`StreamProgram`.
 
-        ``Stream.from_program(p, items)`` ≡
-        ``Stream.source(items).through(p.cell_fn, p.init_state, ...)`` —
-        existing ``StreamProgram`` call sites migrate one line at a time.
+        .. deprecated::
+            Build the one-segment graph directly:
+            ``Stream.source(items).through(p.cell_fn, p.init_state, ...)``.
         """
+        import warnings
+
+        warnings.warn(
+            "Stream.from_program is deprecated; use "
+            "Stream.source(items).through(cell_fn, init_state, ...)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         return Stream.source(items).through(
             program.cell_fn,
             program.init_state,
@@ -437,6 +512,13 @@ def lazy_eval_graph(sink: Node) -> tuple[PyTree, tuple[PyTree, ...]]:
     values: dict[int, PyTree] = {}
     seg_states: list[PyTree] = []
     for node in topo_nodes(sink):
+        if isinstance(node, FeedbackNode):
+            raise TypeError(
+                "feedback graphs have no node-local evaluation order "
+                "(item b depends on item b-lag through the whole chain); "
+                "run them through the lowered ChainProgram — "
+                "run_chain_sequential (Lazy) or FutureEvaluator"
+            )
         if isinstance(node, SourceNode):
             leading_axis_size(node.items, "source items")
             values[id(node)] = node.items
@@ -500,6 +582,20 @@ class ChainInjection:
 
 
 @dataclasses.dataclass(frozen=True)
+class ChainFeedback:
+    """Feedback closure of a lowered chain.
+
+    ``injections[0].materialize()`` yields the ``lag`` init items; item
+    ``b >= lag`` is ``emit(out[b - lag])`` — with any tail maps of the
+    spine already composed *into* ``emit``, because the emitted item is
+    both what re-enters the chain and what is collected.
+    """
+
+    lag: int
+    emit: Callable[[PyTree], PyTree]
+
+
+@dataclasses.dataclass(frozen=True)
 class ChainProgram:
     """Spine-normal-form program: what the Future engine pipelines.
 
@@ -507,6 +603,11 @@ class ChainProgram:
     other injection carries the zip combine that merges it in.  The
     flowing item structure is fixed from the entry on (ring buffers are
     shape-static), so interior combines must be structure-preserving.
+
+    With ``feedback`` set, the primary source holds only the first
+    ``feedback.lag`` items; the rest of the stream unfolds from its own
+    outputs (``finalize`` is always ``None`` then — tail maps fold into
+    the emit).
     """
 
     segments: tuple[ChainSegment, ...]
@@ -514,6 +615,7 @@ class ChainProgram:
     finalize: Callable[[PyTree], PyTree] | None
     num_cells: int
     num_items: int
+    feedback: ChainFeedback | None = None
 
 
 def _pure_feed(node: Node):
@@ -633,6 +735,26 @@ def lower_chain(sink: Node) -> ChainProgram:
             rev_injections.append((cells_after, combine, feed))
             consumer = "zip"
             node = trunk
+        elif isinstance(node, FeedbackNode):
+            # Maps between the feedback root and the first spine op apply
+            # to *every* entering item — init and fed-back alike — so they
+            # fuse downstream (segment pre_fn / zip combine / finalize),
+            # never into the init-items materialize.
+            _flush()
+            emit = node.emit
+            if finalize is not None:
+                # Tail maps run before the emit: the emitted item is both
+                # the fed-back input and the collected output.
+                tail, finalize = finalize, None
+                emit = lambda x, _t=tail, _e=node.emit: _e(_t(x))
+            return _finish_chain(
+                rev_segments,
+                rev_injections,
+                finalize,
+                lambda _n=node: _n.init_items,
+                num_items,
+                feedback=ChainFeedback(lag=node.lag, emit=emit),
+            )
         elif isinstance(node, (SourceNode, ConcatNode)):
             feed = _pure_feed(node)
             if feed is None:
@@ -671,7 +793,8 @@ def _split_zip(node: ZipNode):
 
 
 def _finish_chain(rev_segments, rev_injections, finalize,
-                  primary_feed, num_items) -> ChainProgram:
+                  primary_feed, num_items,
+                  feedback: ChainFeedback | None = None) -> ChainProgram:
     segments = tuple(reversed(rev_segments))
     num_cells = sum(s.num_cells for s in segments)
     injections = [
@@ -680,11 +803,16 @@ def _finish_chain(rev_segments, rev_injections, finalize,
     # rev order = downstream-first; restore spine order (upstream-first) so
     # same-boundary combines fold in program order.
     for cells_after, combine, feed in reversed(rev_injections):
+        cell_index = num_cells - cells_after
+        if feedback is not None and num_cells > 0 and cell_index >= num_cells:
+            raise ValueError(
+                "a zip after the last cell of a feedback chain is "
+                "ambiguous (the fed-back item would not see the merge); "
+                "move the zip before the final segment"
+            )
         injections.append(
             ChainInjection(
-                materialize=feed,
-                cell_index=num_cells - cells_after,
-                combine=combine,
+                materialize=feed, cell_index=cell_index, combine=combine,
             )
         )
     return ChainProgram(
@@ -693,6 +821,7 @@ def _finish_chain(rev_segments, rev_injections, finalize,
         finalize=finalize,
         num_cells=num_cells,
         num_items=num_items,
+        feedback=feedback,
     )
 
 
@@ -728,8 +857,7 @@ def _check_pre_fn_structure(pre_fn, item) -> None:
     surface that contract as a clear error, not a cond type mismatch."""
     ref = jax.eval_shape(lambda x: x, item)
     got = jax.eval_shape(pre_fn, item)
-    sig = lambda t: [(l.shape, l.dtype) for l in jax.tree.leaves(t)]
-    if _tree_structure(ref) != _tree_structure(got) or sig(ref) != sig(got):
+    if not structures_match(ref, got):
         raise ValueError(
             "a mid-spine map/mask fused into a segment must preserve the "
             "flowing item structure (the pipeline's ring buffers are "
@@ -811,3 +939,155 @@ def unify_segments(segments: tuple[ChainSegment, ...]) -> UnifiedChain:
         remat=False,
         split_states=split_states,
     )
+
+
+# ---------------------------------------------------------------------------
+# Sequential reference executor (feedback-capable)
+# ---------------------------------------------------------------------------
+
+
+def structures_match(ref, got) -> bool:
+    """True when two pytrees agree on structure and leaf shapes/dtypes —
+    the shape-static contract every ring-buffered value must satisfy.
+    Single comparison site shared by the emit, pre_fn and entry-zip
+    validators (Lazy and Future must never diverge on it)."""
+    sig = lambda t: [
+        (getattr(l, "shape", None), getattr(l, "dtype", None))
+        for l in jax.tree.leaves(t)
+    ]
+    return _tree_structure(ref) == _tree_structure(got) and sig(ref) == sig(got)
+
+
+def _check_emit_structure(emit, item) -> None:
+    """The feedback emit travels the same shape-static ring buffers as
+    every inter-cell hand-off, so it must keep the flowing item's pytree
+    structure and leaf shapes/dtypes."""
+    ref = jax.eval_shape(lambda x: x, item)
+    got = jax.eval_shape(emit, item)
+    if not structures_match(ref, got):
+        raise ValueError(
+            "a feedback emit must preserve the flowing item structure "
+            "(the emitted item re-enters the chain and is collected); "
+            f"got {_tree_structure(got)} from {_tree_structure(ref)}"
+        )
+
+
+def _chain_cell_machinery(chain: "ChainProgram"):
+    """(cell_fn, init_state, mutable, split_states) for a lowered chain —
+    the raw fast path for one plain segment, the switch-dispatched
+    unified state otherwise.  Shared by both executors so the per-cell
+    primitive sequence (hence bit-equality) is identical."""
+    if not chain.segments:
+        return None, (), False, lambda fs: ()
+    if len(chain.segments) == 1 and chain.segments[0].pre_fn is None:
+        seg = chain.segments[0]
+        cell_fn = jax.checkpoint(seg.cell_fn) if seg.remat else seg.cell_fn
+        return cell_fn, seg.init_state, seg.mutable_state, lambda fs: (fs,)
+    uni = unify_segments(chain.segments)
+    return uni.cell_fn, uni.init_state, uni.mutable_state, uni.split_states
+
+
+def run_chain_sequential(chain: "ChainProgram") -> tuple[tuple, PyTree]:
+    """Execute a lowered :class:`ChainProgram` item-by-item on one device.
+
+    The Lazy monad over the *lowered* form: one ``lax.scan`` over items,
+    cells advanced by inner scans split only at interior injection
+    boundaries.  This is the executor that runs feedback chains
+    sequentially (``lazy_eval_graph`` cannot — feedback has no node-local
+    order): the carry holds a ``lag``-deep FIFO of pending inputs, and
+    each emitted item is both collected and pushed onto the FIFO's tail.
+
+    Returns ``(segment_states, out_items)`` like the Future engine.
+    """
+    n = chain.num_items
+    feeds = [inj.materialize() for inj in chain.injections]
+    fb = chain.feedback
+    cell_fn, init_state, mutable, split_states = _chain_cell_machinery(chain)
+
+    entry = [
+        i for i, inj in enumerate(chain.injections)
+        if i > 0 and inj.cell_index == 0
+    ]
+    interior = [
+        i for i, inj in enumerate(chain.injections)
+        if 0 < inj.cell_index < chain.num_cells
+    ]
+    tail = [
+        i for i, inj in enumerate(chain.injections)
+        if i > 0 and chain.num_cells > 0 and inj.cell_index >= chain.num_cells
+    ]
+    boundaries = sorted({chain.injections[i].cell_index for i in interior})
+    spans = list(
+        zip([0] + boundaries, boundaries + [chain.num_cells])
+    ) if chain.num_cells else []
+
+    def run_item(states, flow, src_items):
+        for i in entry:
+            flow = chain.injections[i].combine(flow, src_items[str(i)])
+        parts = []
+        for a, b in spans:
+            for i in interior:
+                if chain.injections[i].cell_index == a:
+                    flow = chain.injections[i].combine(flow, src_items[str(i)])
+            sub = jax.tree.map(lambda l: l[a:b], states)
+
+            def cell(fl, st):
+                new_st, out = cell_fn(st, fl)
+                if not mutable:
+                    new_st = st
+                return out, new_st
+
+            flow, new_sub = lax.scan(cell, flow, sub)
+            parts.append(new_sub)
+        if not parts:
+            return states, flow
+        if len(parts) == 1:
+            return parts[0], flow
+        return jax.tree.map(
+            lambda *ps: jnp.concatenate(ps, axis=0), *parts
+        ), flow
+
+    src_xs = {
+        str(i): feeds[i] for i in entry + interior
+    }  # every non-primary source has n items
+
+    if fb is not None:
+        flow0 = jax.tree.map(lambda x: x[0], feeds[0])
+        for i in entry:
+            flow0 = chain.injections[i].combine(
+                flow0, jax.tree.map(lambda x: x[0], feeds[i])
+            )
+        _check_emit_structure(fb.emit, flow0)
+
+        def step(carry, xs):
+            states, ring = carry
+            flow = jax.tree.map(lambda r: r[0], ring)
+            new_states, out = run_item(states, flow, xs)
+            emitted = fb.emit(out)
+            ring = jax.tree.map(
+                lambda r, e: jnp.concatenate([r[1:], e[None]], axis=0),
+                ring,
+                emitted,
+            )
+            return (new_states, ring), emitted
+
+        (final_states, _), outs = lax.scan(
+            step, (init_state, feeds[0]), src_xs, length=n
+        )
+        return split_states(final_states), outs
+
+    def step(carry, xs):
+        new_states, out = run_item(carry, xs["__primary__"], xs)
+        return new_states, out
+
+    xs = dict(src_xs)
+    xs["__primary__"] = feeds[0]
+    final_states, outs = lax.scan(step, init_state, xs, length=n)
+    for i in tail:
+        outs = apply_per_item(
+            lambda ab, _c=chain.injections[i].combine: _c(*ab),
+            (outs, feeds[i]),
+        )
+    if chain.finalize is not None:
+        outs = apply_per_item(chain.finalize, outs)
+    return split_states(final_states), outs

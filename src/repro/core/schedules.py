@@ -44,6 +44,22 @@ unit per tick, and unit ``(p, m)`` may start ``handoff`` ticks after
 ``(p-1, m)`` finished.  For ``M >= D`` this achieves the closed-form
 tick counts above; the plan's own ``num_ticks``/``bubble_fraction`` are
 always the ground truth (and are tested against the analytic model).
+
+**Feedback (persistent) plans** — ``feedback_lag=L`` adds the unfold
+combinator's dependency: item ``b``'s entry unit ``(0, b)`` (for
+``b >= L``) becomes ready only ``handoff`` ticks after the *last*
+virtual stage finished item ``b - L``.  Only the first ``L`` items are
+fed from the primary source's carousel; every later item re-enters from
+its own output, carried by the same one-hop ring (the last virtual
+stage always lives on device D-1, whose ring successor is device 0) and
+parked in the same interval-colored in-flight buffers until its entry
+tick.  The resulting plan is *persistent*: after the initial fill it
+reaches a steady state with no per-step fill/drain — the serving
+engine's continuous-batching decode, where the feed carousel keeps
+admitting the stream's own next steps (and, via an entry-zip overlay
+source, freshly prefilled requests into retired slots) tick after tick.
+With ``L >= handoff * D`` (e.g. 8 in-flight microbatches on 4 devices)
+the steady state is bubble-free.
 """
 from __future__ import annotations
 
@@ -114,6 +130,10 @@ class SchedulePlan:
     src_feed_idx: np.ndarray | None = None
     src_feed_advance: np.ndarray | None = None
     src_consume: np.ndarray | None = None
+    # Unfold/feedback plans: item b >= feedback_lag re-enters from item
+    # b - feedback_lag's final output; only the first feedback_lag items
+    # are primary-source fed.  None = ordinary feed-forward plan.
+    feedback_lag: int | None = None
 
     @property
     def num_sources(self) -> int:
@@ -174,12 +194,17 @@ def feed_items_per_source(num_stages: int, num_microbatches: int) -> int:
     return -(-num_microbatches // max(num_stages, 1)) + 1
 
 
-def _allocate_slots(work, finish, num_stages: int, num_positions: int):
+def _allocate_slots(work, finish, num_stages: int, num_positions: int,
+                    feedback_lag: int | None = None, num_items: int = 0):
     """Interval-graph coloring of in-flight hand-offs via smallest-free.
 
     (p, m) computed at tick tau on dev(p) is ppermute'd during tick
     tau+1 and lands on dev(p+1) = (dev+1) % D, where it occupies a slot
-    until (p+1, m) reads it.  Returns (recv_slot, read_slot, num_slots).
+    until (p+1, m) reads it.  Under feedback the last position's output
+    is a hand-off too: it rides the same ring hop (device D-1's
+    successor is device 0) and occupies a device-0 slot until the entry
+    unit ``(0, m + lag)`` reads it.
+    Returns (recv_slot, read_slot, num_slots).
     """
     num_ticks = len(work)
     d_ = num_stages
@@ -198,9 +223,12 @@ def _allocate_slots(work, finish, num_stages: int, num_positions: int):
                 continue
             p, m = unit
             if p == num_positions - 1:
-                continue  # final output: collected, arrival discarded
+                if feedback_lag is None or m + feedback_lag >= num_items:
+                    continue  # final output: collected, arrival discarded
+                consume = finish[(0, m + feedback_lag)]
+            else:
+                consume = finish[(p + 1, m)]
             rdev = (dev + 1) % d_
-            consume = finish[(p + 1, m)]
             if free[rdev]:
                 slot = min(free[rdev])
                 free[rdev].remove(slot)
@@ -244,6 +272,7 @@ def build_plan(
     interleave: int = 1,
     handoff: int = DEFAULT_HANDOFF,
     inject_positions: tuple[int, ...] = (0,),
+    feedback_lag: int | None = None,
 ) -> SchedulePlan:
     """Greedy list-schedule of all (virtual stage, microbatch) units.
 
@@ -260,10 +289,22 @@ def build_plan(
     tables themselves are position-oblivious, so injections never change
     the makespan — source s's item m is simply due on device
     ``p_s % D`` the tick unit ``(p_s, m)`` starts.
+
+    ``feedback_lag=L`` builds a persistent (unfold) plan: entry unit
+    ``(0, b)`` for ``b >= L`` becomes ready ``handoff`` ticks after the
+    final position finished item ``b - L``, and only items ``b < L``
+    are primary-source fed.  Feedback plans use the microbatch-major
+    priority only — the chunk-major candidate's out-of-order finals
+    would deadlock against the feedback dependency chain.
     """
     _validate(name, num_stages, num_microbatches, interleave)
     d_, m_, v_ = num_stages, num_microbatches, interleave
     num_positions = d_ * v_  # global virtual stages
+    if feedback_lag is not None and not 1 <= feedback_lag <= m_:
+        raise ValueError(
+            f"feedback_lag must be in [1, num_microbatches={m_}], got "
+            f"{feedback_lag}"
+        )
     if not inject_positions or inject_positions[0] != 0:
         raise ValueError(
             f"inject_positions must start with the chain entry 0, got "
@@ -288,7 +329,8 @@ def build_plan(
         finish: dict[tuple[int, int], int] = {}  # (p, m) -> tick computed
         ready: list[list] = [[] for _ in range(d_)]  # per-device heaps
         becomes_ready: dict[int, list[tuple[int, int]]] = {}
-        for m in range(m_):
+        first_wave = m_ if feedback_lag is None else min(feedback_lag, m_)
+        for m in range(first_wave):
             heapq.heappush(ready[0], (priority((0, m)), (0, m)))
         work: list[list[tuple[int, int] | None]] = []  # work[t][d] = (p, m)
         remaining = num_positions * m_
@@ -310,9 +352,21 @@ def build_plan(
                         becomes_ready.setdefault(t + handoff, []).append(
                             (p + 1, m)
                         )
+                    elif feedback_lag is not None and m + feedback_lag < m_:
+                        # The unfold edge: item m's final output is the
+                        # entry input of item m + lag, one ring hop away.
+                        becomes_ready.setdefault(t + handoff, []).append(
+                            (0, m + feedback_lag)
+                        )
             work.append(row)
             t += 1
-            if t > (m_ + handoff) * (num_positions + 1) + 8:  # pragma: no cover
+            limit = (m_ + handoff) * (num_positions + 1) + 8
+            if feedback_lag is not None:
+                # Feedback serializes chains of m_/lag items end to end.
+                limit += (handoff * num_positions + handoff) * (
+                    m_ // max(feedback_lag, 1) + 1
+                ) * max(1, m_)
+            if t > limit:  # pragma: no cover
                 raise RuntimeError(f"schedule {name} did not converge")
         return work, finish
 
@@ -321,14 +375,16 @@ def build_plan(
     # is exactly the memory blowup interleaved schedules exist to avoid.
     # Each candidate is slot-allocated exactly once; the winner's tables
     # are reused directly.
-    candidates = []
-    for priority in (
+    priorities = [
         lambda u: (u[1], -u[0]),  # microbatch-major: K stays O(V)
-        lambda u: (u[0] // d_, u[1]),  # chunk-major: best T ragged
-    ):
+    ]
+    if feedback_lag is None:
+        priorities.append(lambda u: (u[0] // d_, u[1]))  # chunk-major
+    candidates = []
+    for priority in priorities:
         work, finish = _greedy(priority)
         recv_slot, read_slot, num_slots = _allocate_slots(
-            work, finish, d_, num_positions
+            work, finish, d_, num_positions, feedback_lag, m_
         )
         candidates.append(
             (len(work), num_slots, work, finish, recv_slot, read_slot)
@@ -367,10 +423,19 @@ def build_plan(
     src_feed_idx = np.zeros((num_src, num_ticks), np.int32)
     src_consume = np.zeros((num_src, num_ticks), np.int32)
     for s, (p_s, dev_s) in enumerate(zip(inject_positions, inject_devices)):
+        # Under feedback the primary source holds only the first `lag`
+        # items; later entries re-enter from the in-flight buffers.
+        # Every *other* source (entry-zip overlays, interior zips) still
+        # delivers one item per stream position.
+        feed_total = m_
+        if s == 0 and feedback_lag is not None:
+            feed_total = min(feedback_lag, m_)
         consumed = 0
         for tt in range(num_ticks):
             unit = work[tt][dev_s]
             if unit is not None and unit[0] == p_s:
+                if s == 0 and unit[1] >= feed_total:
+                    continue  # fed back, not carousel-fed
                 assert unit[1] == consumed, (
                     f"source {s} consumed out of order at position {p_s}"
                 )
@@ -379,13 +444,24 @@ def build_plan(
                     src_feed_reload[s, tt] = 1
                     src_feed_idx[s, tt] = consumed // d_
                 consumed += 1
-        assert consumed == m_
+        assert consumed == feed_total
     src_feed_advance = src_consume.copy()
 
-    # Primary-source injections are the units that read no slot.
+    # Primary-source injections are the units that read no slot;
+    # fed-back entries are the units at position 0 that *do* read one.
     for tt in range(num_ticks):
         if src_consume[0, tt]:
             assert read_slot[tt, 0] == -1
+        unit = work[tt][0]
+        if (
+            feedback_lag is not None
+            and unit is not None
+            and unit[0] == 0
+            and unit[1] >= feedback_lag
+        ):
+            assert read_slot[tt, 0] >= 0, (
+                f"feedback item {unit[1]} has no buffered input at tick {tt}"
+            )
 
     return SchedulePlan(
         name=name,
@@ -410,4 +486,5 @@ def build_plan(
         src_feed_idx=src_feed_idx,
         src_feed_advance=src_feed_advance,
         src_consume=src_consume,
+        feedback_lag=feedback_lag,
     )

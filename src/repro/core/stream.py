@@ -174,10 +174,19 @@ def _as_chain(program, items) -> tuple[G.ChainProgram, bool]:
     """Normalize (StreamProgram, items) | Stream into a ChainProgram.
 
     Returns ``(chain, legacy)`` — legacy callers get the single
-    segment's states back un-tupled.
+    segment's states back un-tupled.  Builds the one-segment graph
+    directly (``Stream.from_program`` warns on use; the adapter itself
+    must not).
     """
     if _check_program(program, items):
-        return Stream.from_program(program, items).lower(), True
+        stream = Stream.source(items).through(
+            program.cell_fn,
+            program.init_state,
+            num_cells=program.num_cells,
+            mutable_state=program.mutable_state,
+            remat=program.remat,
+        )
+        return stream.lower(), True
     return program.lower(), False
 
 
@@ -198,6 +207,12 @@ class LazyEvaluator:
     name = "lazy"
 
     def run_graph(self, stream: Stream) -> StreamResult:
+        if any(isinstance(n, G.FeedbackNode) for n in stream.nodes()):
+            # Feedback has no node-local order; run the lowered chain
+            # sequentially (same per-cell primitive sequence as the
+            # Future engine, so bit-equality holds for unfolds too).
+            states, outs = G.run_chain_sequential(stream.lower())
+            return StreamResult(items=outs, states=states)
         outs, states = G.lazy_eval_graph(stream.node)
         return StreamResult(items=outs, states=states)
 
@@ -297,7 +312,10 @@ class FutureEvaluator:
         # so stages can themselves be FSDP×TP sharded (production mode).
 
     def plan_for(
-        self, num_microbatches: int, inject_positions: tuple[int, ...] = (0,)
+        self,
+        num_microbatches: int,
+        inject_positions: tuple[int, ...] = (0,),
+        feedback_lag: int | None = None,
     ) -> SchedulePlan:
         """The tick plan this evaluator would run for M microbatches."""
         return build_plan(
@@ -306,6 +324,7 @@ class FutureEvaluator:
             num_microbatches,
             self.interleave,
             inject_positions=inject_positions,
+            feedback_lag=feedback_lag,
         )
 
     def run_graph(self, stream: Stream) -> StreamResult:
@@ -327,9 +346,15 @@ class FutureEvaluator:
         num_devices = self.mesh.shape[axis]
         num_virtual = num_devices * self.interleave
         m_ = chain.num_items
+        fb = chain.feedback
 
         # Segment-free program: pure data plumbing, no pipeline region.
         if chain.num_cells == 0:
+            if fb is not None:
+                raise ValueError(
+                    "a segment-free feedback chain has nothing to "
+                    "pipeline; run it with LazyEvaluator"
+                )
             feeds = [inj.materialize() for inj in chain.injections]
             outs = feeds[0]
             for inj, feed in zip(chain.injections[1:], feeds[1:]):
@@ -368,30 +393,19 @@ class FutureEvaluator:
             pipelined_inj.append(inj)
             positions.append(inj.cell_index // cells_per_group)
 
-        plan = self.plan_for(m_, tuple(positions))
+        plan = self.plan_for(
+            m_, tuple(positions), feedback_lag=fb.lag if fb else None
+        )
         d_, v_, k_ = num_devices, self.interleave, plan.num_slots
         n_src = len(pipelined_inj)
         entry_src = [s for s in range(n_src) if positions[s] == 0]
-        interior_src = [s for s in range(n_src) if positions[s] != 0]
 
         # One fused chain: raw fast path for a single plain segment (the
         # common case, and bit/HLO-identical to the pre-algebra engine);
         # switch-dispatched unified state otherwise.
-        single = (
-            len(chain.segments) == 1 and chain.segments[0].pre_fn is None
+        cell_fn, init_state, mutable, split_states = G._chain_cell_machinery(
+            chain
         )
-        if single:
-            seg = chain.segments[0]
-            cell_fn = jax.checkpoint(seg.cell_fn) if seg.remat else seg.cell_fn
-            init_state = seg.init_state
-            mutable = seg.mutable_state
-            split_states = lambda fs: (fs,)
-        else:
-            uni = G.unify_segments(chain.segments)
-            cell_fn = uni.cell_fn
-            init_state = uni.init_state
-            mutable = uni.mutable_state
-            split_states = uni.split_states
 
         # Device-major cell layout: device d's shard holds its V groups
         # back to back (group v = cells of virtual stage v*D + d).  For
@@ -410,11 +424,12 @@ class FutureEvaluator:
 
         # Per-source round-robin feed shards: global (D, J, ...) with a
         # rotation offset so source s's item m sits on its injection
-        # device exactly when the carousel has advanced m times.
-        feed_len = math.ceil(m_ / d_)
-
-        def _to_feed(x, offset):
-            pad = feed_len * d_ - m_
+        # device exactly when the carousel has advanced m times.  A
+        # feedback chain's primary source holds only its `lag` init
+        # items, so the feed length is per source.
+        def _to_feed(x, offset, n_items_s):
+            feed_len = math.ceil(n_items_s / d_)
+            pad = feed_len * d_ - n_items_s
             if pad:
                 x = jnp.concatenate(
                     [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)]
@@ -425,14 +440,22 @@ class FutureEvaluator:
             return jnp.swapaxes(x, 0, 1)
 
         sources = [inj.materialize() for inj in pipelined_inj]
+        src_items = [
+            G.leading_axis_size(src, f"source {s} items")
+            for s, src in enumerate(sources)
+        ]
         feeds_fed = tuple(
             jax.tree.map(
-                lambda x, _o=plan.inject_devices[s]: _to_feed(x, _o), sources[s]
+                lambda x, _o=plan.inject_devices[s], _n=src_items[s]: _to_feed(
+                    x, _o, _n
+                ),
+                sources[s],
             )
             for s in range(n_src)
         )
 
         combines = [inj.combine for inj in pipelined_inj]
+        interior_src = [s for s in range(n_src) if positions[s] != 0]
 
         def entry_fold(feed_items):
             flow = feed_items[0]
@@ -451,6 +474,22 @@ class FutureEvaluator:
                 for src in sources
             ],
         )
+        if fb is not None:
+            # A fed-back item re-enters through the same entry combines
+            # as an init item, so entry zips on a feedback chain must be
+            # structure-preserving overlays; emit must preserve the
+            # flowing structure too (it rides the hand-off ring).
+            prim_shape = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                sources[0],
+            )
+            if not G.structures_match(prim_shape, flow_shape):
+                raise ValueError(
+                    "entry zips on a feedback chain must preserve the "
+                    "primary item structure (the fed-back item re-enters "
+                    "through the same combines)"
+                )
+            G._check_emit_structure(fb.emit, flow_shape)
 
         spec_shard = lambda tree: jax.tree.map(
             lambda _: jax.sharding.PartitionSpec(axis), tree
@@ -557,17 +596,30 @@ class FutureEvaluator:
 
                 # 2. Input: a fresh injection (the entry zips' fold over
                 # their feed registers), a buffered future the
-                # predecessor emitted `handoff` ticks ago, or — at an
-                # interior injection device — that value merged with the
-                # consuming zip's source register.
+                # predecessor emitted `handoff` ticks ago — which under
+                # feedback is also how item b-lag's emitted output
+                # re-enters at position 0 — or, at an injection device,
+                # that value merged with the consuming zip's register.
                 slot_val = jax.tree.map(
                     lambda b: lax.dynamic_index_in_dim(
                         b, jnp.clip(rslot, 0, k_ - 1), keepdims=False
                     ),
                     buf,
                 )
-                injected = entry_fold(feed_curs)
-                inp = _tree_where(rslot < 0, injected, slot_val)
+                if fb is None:
+                    inp = _tree_where(rslot < 0, entry_fold(feed_curs), slot_val)
+                else:
+                    # Entry zips gate on their consume column so they
+                    # overlay fed-back entries (rslot >= 0) as well as
+                    # fresh init items — the carousel admitting new
+                    # requests into retired slots mid-flight.
+                    inp = _tree_where(rslot < 0, feed_curs[0], slot_val)
+                    for s in entry_src[1:]:
+                        merged = combines[s](inp, feed_curs[s])
+                        apply_s = (x["src_consume"][s] > 0) & (
+                            stage == plan.inject_devices[s]
+                        )
+                        inp = _tree_where(apply_s, merged, inp)
                 for s in interior_src:
                     merged = combines[s](inp, feed_curs[s])
                     apply_s = (x["src_consume"][s] > 0) & (
@@ -585,10 +637,30 @@ class FutureEvaluator:
                     )
                 else:
                     states_g = states
-                new_sg, out = group_scan(states_g, inp)
                 valid = mb >= 0
                 if mutable:
-                    new_sg = _tree_where(valid, new_sg, states_g)
+                    # Idle ticks (fill/drain) skip the cell scan *and*
+                    # the state write-back entirely: a whole-state
+                    # where(valid, new, old) would copy every cache
+                    # byte per tick — the dominant cost of a serving
+                    # chain whose state is the KV cache.  Invalid-tick
+                    # outputs are never collected, stored, or read, so
+                    # passing the input through is unobservable.
+                    new_sg, out = lax.cond(
+                        valid,
+                        lambda args: group_scan(*args),
+                        lambda args: args,
+                        (states_g, inp),
+                    )
+                else:
+                    new_sg, out = group_scan(states_g, inp)
+                if fb is not None:
+                    # Final virtual stage: the emitted item is both the
+                    # collected output and — one ring hop later — the
+                    # entry input of item mb + lag.  `collect` marks
+                    # exactly the final-position units.
+                    out = lax.cond(coll > 0, fb.emit, lambda o: o, out)
+                if mutable:
                     if v_ > 1:
                         states = jax.tree.map(
                             lambda s, g: lax.dynamic_update_index_in_dim(

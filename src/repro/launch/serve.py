@@ -1,7 +1,16 @@
 """End-to-end serving driver: continuous batching over a token stream.
 
+    # layer-sequential reference engine
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b --smoke \
         --requests 16 --max-new 12
+
+    # Stream-shaped pipelined decode (cells sharded over the devices;
+    # smoke configs have 2 layer groups, so deepen with --num-layers):
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --smoke \
+        --num-layers 8 --engine stream --schedule interleaved \
+        --interleave 2 --cells 8 --microbatches 4 --max-batch 8 \
+        --round-steps 8 --devices 4
 """
 from __future__ import annotations
 
@@ -11,10 +20,12 @@ import time
 import jax
 import numpy as np
 
+from repro import compat
+from repro.configs.base import DecodePipelineConfig
 from repro.configs.registry import ARCH_IDS, get_config, smoke_config
 from repro.models import transformer as T
 from repro.models.params import init_params, param_count
-from repro.serve.engine import Engine, ServeConfig
+from repro.serve.engine import Engine, ServeConfig, StreamEngine
 
 
 def main(argv=None):
@@ -29,11 +40,32 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    # Stream-shaped serving knobs (DecodePipelineConfig)
+    ap.add_argument("--engine", choices=("sequential", "stream"),
+                    default="sequential")
+    ap.add_argument("--schedule", default="gpipe",
+                    choices=("gpipe", "one_f_one_b", "interleaved"))
+    ap.add_argument("--interleave", type=int, default=1)
+    ap.add_argument("--cells", type=int, default=4,
+                    help="layer-group pipeline cells (must divide groups)")
+    ap.add_argument("--microbatches", type=int, default=4,
+                    help="in-flight request microbatches (feedback lag)")
+    ap.add_argument("--round-steps", type=int, default=8,
+                    help="decode steps per device-program invocation")
+    ap.add_argument("--admit-per-round", type=int, default=4)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="pipeline devices for --engine stream "
+                    "(0 = all; 1 = LazyEvaluator, layer-sequential)")
+    ap.add_argument("--num-layers", type=int, default=0,
+                    help="override layer count (smoke configs have only "
+                    "2 groups — deepen them so --cells can split)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_config(cfg)
+    if args.num_layers:
+        cfg = cfg.with_overrides(num_layers=args.num_layers)
     if cfg.embeds_input:
         raise SystemExit("embeds-input archs need the embedding frontend stub; "
                          "use a token arch for the serving example")
@@ -41,11 +73,29 @@ def main(argv=None):
     params = init_params(rng, T.model_layout(cfg))
     print(f"arch={cfg.name} params={param_count(T.model_layout(cfg))/1e6:.1f}M")
 
-    eng = Engine(params, cfg, ServeConfig(
+    scfg = ServeConfig(
         max_batch=args.max_batch, max_len=args.max_len,
         prefill_chunk=args.prefill_chunk, max_new_tokens=args.max_new,
         temperature=args.temperature, seed=args.seed,
-    ))
+    )
+    if args.engine == "stream":
+        ndev = args.devices or jax.device_count()
+        mesh = None
+        if ndev > 1:
+            mesh = compat.make_mesh(
+                (ndev,), ("pod",), devices=jax.devices()[:ndev]
+            )
+        pcfg = DecodePipelineConfig(
+            num_cells=args.cells, microbatches=args.microbatches,
+            schedule=args.schedule, interleave=args.interleave,
+            round_steps=args.round_steps, admit_per_round=args.admit_per_round,
+        )
+        eng = StreamEngine(params, cfg, scfg, pcfg, mesh=mesh)
+        mode = (f"stream/{args.schedule}xV{args.interleave} D={ndev} "
+                f"S={args.cells} M={args.microbatches} T={args.round_steps}")
+    else:
+        eng = Engine(params, cfg, scfg)
+        mode = "sequential"
     np_rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()
     reqs = [
@@ -55,7 +105,7 @@ def main(argv=None):
     done = eng.run_until_drained()
     wall = time.perf_counter() - t0
     total_new = sum(len(r.out_tokens) for r in done)
-    print(f"{len(done)} requests, {total_new} tokens in {wall:.2f}s "
+    print(f"[{mode}] {len(done)} requests, {total_new} tokens in {wall:.2f}s "
           f"({total_new/wall:.1f} tok/s with continuous batching)")
     for r in done[:4]:
         print(f"  req {r.uid}: {r.out_tokens}")

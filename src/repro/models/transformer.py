@@ -11,6 +11,12 @@ Step kinds:
   * ``forward``      — logits for full sequences (train / smoke).
   * ``prefill``      — forward + materialized KV/SSD caches + last logits.
   * ``decode_step``  — one token per sequence against preallocated caches.
+  * decode *cells*   — the same decode math split into ``num_cells``
+    contiguous layer-group pipeline cells (``split_decode_cells`` /
+    ``make_decode_cell`` / ``make_decode_emit``), each owning its layer
+    params and KV/SSD cache shard as mutable per-cell Stream state; the
+    serving engine runs them under ``Stream.feedback`` so the sampled
+    token re-enters as the next item.
 """
 from __future__ import annotations
 
@@ -458,13 +464,20 @@ def prefill_step(
     q_chunk=512,
     kv_chunk=1024,
     unroll=1,
+    logits_at: int | None = None,
 ):
     """Chunked streaming prefill: process a prompt chunk at offset ``pos``.
 
     The chunk sequence is a bounded stream whose carried value is the
     KV/SSD cache (the paper's construct on the sequence axis): chunk c's
     attention forces the cache future produced by chunk c-1.
-    tokens: (B, C).  Returns (last-position logits (B,V), new caches).
+    tokens: (B, C).  Returns (logits (B,V), new caches) — logits at the
+    chunk's last position, or at index ``logits_at`` when given (static
+    int or traced scalar; a ragged prompt tail padded to one masked
+    chunk reads its logits at the last *real* position, and a traced
+    index lets every tail length share one compiled prefill.  Pad
+    queries only pollute pad rows, which the next decode's write
+    position and kv_len mask retire).
     """
     plans = block_plans(cfg)
     if cfg.embeds_input:
@@ -493,5 +506,232 @@ def prefill_step(
 
     x, new_caches = lax.scan(group_fn, x, (params["blocks"], caches), unroll=unroll)
     x = _norm(cfg, params.get("final_norm"), x)
-    lg = L.logits(params.get("head"), params["embed"], x[:, -1:, :], cfg)
+    if logits_at is None:
+        xs_last = x[:, s - 1 : s, :]
+    elif isinstance(logits_at, int):
+        xs_last = x[:, logits_at : logits_at + 1, :]
+    else:  # traced index: one compile serves every ragged-tail length
+        xs_last = lax.dynamic_slice_in_dim(x, logits_at, 1, axis=1)
+    lg = L.logits(params.get("head"), params["embed"], xs_last, cfg)
     return lg[:, 0, :], new_caches
+
+
+# ---------------------------------------------------------------------------
+# Decode as Stream cells (pipelined serving)
+# ---------------------------------------------------------------------------
+#
+# The decode loop *is* a stream: cells = contiguous layer groups (each
+# owning its params and its KV/SSD cache shard as mutable per-cell
+# state), items = in-flight request microbatches.  The flowing item is a
+# fixed-structure dict
+#
+#     {"x":   (Bm, 1, d)  hidden state (embed(tok) on entry),
+#      "tok": (Bm,)       the token being decoded,
+#      "pos": (Bm,)       per-slot context length (cache write position),
+#      "active", "uid", "ngen", "budget": (Bm,) per-slot bookkeeping,
+#      "mb":  ()          which microbatch of the batch this item is,
+#      "step": ()         round-local decode step}
+#
+# and `make_decode_emit` closes the loop: final-norm -> logits -> sample
+# -> re-embed, so the emitted item is exactly the next step's input — the
+# shape `Stream.feedback` runs.  Inactive slots keep decoding with frozen
+# pos/tok (identical to the sequential engine, which batches them too);
+# their cache writes land at the frozen position < max_len and are
+# overwritten at the next admission.
+
+
+def _split_cells(tree, num_cells: int):
+    def _split(leaf):
+        groups = leaf.shape[0]
+        if groups % num_cells != 0:
+            raise ValueError(
+                f"{groups} layer groups not divisible by num_cells={num_cells}"
+            )
+        return leaf.reshape((num_cells, groups // num_cells) + leaf.shape[1:])
+
+    return jax.tree.map(_split, tree)
+
+
+def split_decode_cells(params, caches, num_cells: int):
+    """Slice stacked caches into ``num_cells`` contiguous layer-group
+    cells (leading axis ``num_cells`` — Stream per-cell state).  Leaves
+    (groups, ...) become (num_cells, groups/num_cells, ...).
+
+    The *mutable* per-cell state is ``{"idx", "cache"}`` only: layer
+    params are immutable, so :func:`make_decode_cell` closes over the
+    whole stack and gathers its cell's slice by ``idx`` — keeping
+    megabytes of weights out of the pipeline's per-tick state
+    write-backs (they would otherwise be copied every tick)."""
+    del params  # params ride the cell_fn closure, not the mutable state
+    return {
+        "idx": jnp.arange(num_cells, dtype=jnp.int32),
+        "cache": _split_cells(caches, num_cells),
+    }
+
+
+def merge_decode_caches(cell_states) -> PyTree:
+    """Inverse of :func:`split_decode_cells` for the cache half."""
+    return jax.tree.map(
+        lambda l: l.reshape((-1,) + l.shape[2:]), cell_states["cache"]
+    )
+
+
+def stack_admission_payload(singles, slots, steps, mbs, num_cells: int):
+    """Pack host-prefilled single-request caches into per-cell admission
+    state.
+
+    ``singles``: list of A caches from ``init_cache(cfg, 1, max_len)``
+    after prefill (leaves (groups, 1, ...)).  Returns a pytree with
+    leading axis ``num_cells`` holding, per cell, the slice of every
+    admission's cache this cell owns plus the (slot, step, microbatch)
+    the plan installs it at.  ``step == -1`` rows never fire (padding).
+    """
+    a_ = len(singles)
+
+    def _cellify(*leaves):
+        stacked = jnp.stack([l[:, 0] for l in leaves])  # (A, groups, ...)
+        g = stacked.shape[1]
+        per = g // num_cells
+        stacked = stacked.reshape(
+            (a_, num_cells, per) + stacked.shape[2:]
+        )
+        return jnp.swapaxes(stacked, 0, 1)  # (num_cells, A, gpc, ...)
+
+    cache = jax.tree.map(lambda *ls: _cellify(*ls), *singles) if a_ else None
+    meta = {
+        "slot": jnp.broadcast_to(jnp.asarray(slots, jnp.int32), (num_cells, a_)),
+        "step": jnp.broadcast_to(jnp.asarray(steps, jnp.int32), (num_cells, a_)),
+        "mb": jnp.broadcast_to(jnp.asarray(mbs, jnp.int32), (num_cells, a_)),
+    }
+    return {"cache": cache, **meta} if a_ else meta
+
+
+def make_decode_cell(
+    cfg: ArchConfig,
+    params,
+    *,
+    num_cells: int,
+    microbatch: int,
+    attn_impl: str = "dense",
+    kv_chunk: int = 1024,
+    admissions: int = 0,
+):
+    """One pipeline cell of the decode stream.
+
+    ``cell_fn(state, item) -> (state', item')`` where ``state`` holds
+    this cell's index (its layer-group params are gathered from the
+    closed-over stack — immutable weights never enter the mutable
+    state), its cache shard for the *whole* batch, and (with
+    ``admissions > 0``) the in-plan admission buffer: freshly prefilled
+    whole-slot cache columns installed the moment this cell first sees
+    item ``(step, mb)`` — continuous batching executed by the plan, not
+    by host Python between steps.
+    """
+    plans = block_plans(cfg)
+    cell_blocks = _split_cells(params["blocks"], num_cells)
+
+    def cell_fn(state, item):
+        cache = state["cache"]
+        if admissions:
+            adm = state["adm"]
+            gates = [
+                (adm["step"][a] == item["step"]) & (adm["mb"][a] == item["mb"])
+                for a in range(admissions)
+            ]
+            any_hit = gates[0]
+            for g in gates[1:]:
+                any_hit = any_hit | g
+
+            def _install_all(cache_in):
+                out = cache_in
+                for a in range(admissions):
+                    slot = jnp.clip(adm["slot"][a], 0, None)
+
+                    def _install(cfull, crow, _g=gates[a], _s=slot, _a=a):
+                        cur = lax.dynamic_slice_in_dim(cfull, _s, 1, axis=1)
+                        new = jnp.where(_g, crow[_a][:, None], cur)
+                        return lax.dynamic_update_slice_in_dim(
+                            cfull, new, _s, axis=1
+                        )
+
+                    out = jax.tree.map(_install, out, adm["cache"])
+                return out
+
+            # Admission ticks are rare (<= admit_per_round per round per
+            # cell); everything else skips the install entirely.
+            cache = lax.cond(any_hit, _install_all, lambda c: c, cache)
+        mb0 = item["mb"] * microbatch
+        cache_mb = jax.tree.map(
+            lambda c: lax.dynamic_slice_in_dim(c, mb0, microbatch, axis=1),
+            cache,
+        )
+        lengths = item["pos"]
+        positions = lengths[:, None]
+        kv_len = (lengths + 1)[:, None]
+
+        def group_fn(x, scan_in):
+            group_params, group_cache = scan_in
+            x, new_cache, _ = _apply_group(
+                group_params, x, cfg, plans,
+                positions=positions, group_cache=group_cache,
+                cache_pos=lengths, kv_len=kv_len,
+                attn_impl=attn_impl, kv_chunk=kv_chunk, q_chunk=1,
+            )
+            return x, new_cache
+
+        blocks = jax.tree.map(
+            lambda p: lax.dynamic_index_in_dim(p, state["idx"], keepdims=False),
+            cell_blocks,
+        )
+        x, new_mb = lax.scan(group_fn, item["x"], (blocks, cache_mb))
+        cache = jax.tree.map(
+            lambda full, mb: lax.dynamic_update_slice_in_dim(
+                full, mb, mb0, axis=1
+            ),
+            cache,
+            new_mb,
+        )
+        return {**state, "cache": cache}, {**item, "x": x}
+
+    return cell_fn
+
+
+def make_decode_emit(
+    params,
+    cfg: ArchConfig,
+    *,
+    sample_fn,
+    eos_id: int,
+    max_len: int,
+):
+    """The feedback emit closing the decode loop: final-norm -> logits ->
+    sample -> re-embed.  ``sample_fn(logits, uid, ngen) -> (Bm,) int32``
+    (the engine supplies it with temperature/seed closed over, so host
+    and device sampling share one code path).  Retirement mirrors the
+    sequential engine exactly: a slot freezes (pos/tok/ngen stop) once
+    it has generated its budget, hit EOS, or reached the ``max_len``
+    cache boundary — frozen slots keep flowing (batched decode does not
+    shrink) but never advance, so no cache row at index >= max_len is
+    ever written.
+    """
+
+    def emit(item):
+        x = _norm(cfg, params.get("final_norm"), item["x"])
+        lg = L.logits(params.get("head"), params["embed"], x, cfg)[:, 0, :]
+        sampled = sample_fn(lg, item["uid"], item["ngen"])
+        act = item["active"]
+        tok = jnp.where(act, sampled, item["tok"])
+        pos = jnp.where(act, item["pos"] + 1, item["pos"])
+        ngen = jnp.where(act, item["ngen"] + 1, item["ngen"])
+        done = (ngen >= item["budget"]) | (tok == eos_id) | (pos + 1 >= max_len)
+        return {
+            **item,
+            "x": L.embed_lookup(params["embed"]["embedding"], tok)[:, None, :],
+            "tok": tok,
+            "pos": pos,
+            "ngen": ngen,
+            "active": act & ~done,
+            "step": item["step"] + 1,
+        }
+
+    return emit

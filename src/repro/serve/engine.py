@@ -1,17 +1,44 @@
-"""Serving engine: continuous batching over a slotted KV cache.
+"""Serving engines: continuous batching over a slotted KV cache.
 
 The engine is the paper's construct at the request level: each submitted
 request returns a *future* (its completion), the decode loop is the
 stream, and chunked prefill (``prefill_chunk``) is the §7 chunk-size knob
 balancing time-to-first-token against decode-step latency.
 
-Architecture:
+Two engines share one continuous-batching contract (``submit`` /
+``step`` / ``run_until_drained``) and produce bit-identical greedy
+outputs:
+
+``Engine`` — the layer-sequential reference.  One monolithic jitted
+``decode_step`` per decode step over all ``max_batch`` slots; admission,
+sampling and retirement run in host Python between steps.
+
+``StreamEngine`` — decode as a Stream program.  The transformer's layer
+groups split into ``num_cells`` pipeline cells (each owning its params
+and cache shard as mutable per-cell Stream state), the batch splits into
+``microbatches`` in-flight items, and one ``Stream.feedback`` program
+executes ``round_steps`` decode steps per device-program invocation:
+the emitted token re-enters as the next item (lag = microbatches), and a
+zipped *admission overlay* source plus per-cell admission buffers admit
+freshly prefilled requests into retired slots **inside the plan** —
+continuous batching realized by the schedule's feed carousel, not by
+host Python.  Under ``FutureEvaluator`` the cells pipeline across a mesh
+axis (gpipe / interleaved), hiding per-layer-group latency exactly as
+the paper's Future substitution promises; under ``LazyEvaluator`` the
+same program runs layer-sequentially on one device (the baseline
+``bench_serve`` measures against).
+
+Common architecture:
   * ``max_batch`` cache slots; per-slot length/active/eos state on host.
-  * admit: new requests prefill in chunks (B=1) and are scattered into a
-    free slot's cache rows.
-  * step: one batched ``decode_step`` over all slots (inactive slots are
-    masked); sampled tokens append to per-slot buffers.
-  * complete: slots retire on EOS or max_new_tokens; their futures resolve.
+  * admit: new requests prefill in chunks (B=1, ragged tail padded to a
+    single masked chunk) and enter a free slot — by host scatter
+    (``Engine``) or by in-plan install (``StreamEngine``).
+  * retire: slots retire on EOS, exhausted budget, or the ``max_len``
+    cache boundary — including on the prefill-sampled first token; their
+    futures resolve.
+  * sampling: greedy argmax, or temperature sampling whose RNG derives
+    from ``(seed, request uid, token index)`` — reproducible per request
+    regardless of admission order, batching, or evaluator.
 """
 from __future__ import annotations
 
@@ -24,7 +51,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ArchConfig
+from repro.configs.base import ArchConfig, DecodePipelineConfig
+from repro.core import FutureEvaluator, LazyEvaluator, Stream
+from repro.models import layers as L
 from repro.models import transformer as T
 
 PyTree = Any
@@ -51,38 +80,67 @@ class Request:
     done: bool = False
 
 
-class Engine:
+def sample_token(logits, temperature: float, seed: int, uid, ngen):
+    """Sample the next token; reproducible per request.
+
+    Greedy (``temperature <= 0``) is a plain argmax.  Temperature
+    sampling derives its RNG key from ``(seed, uid, ngen)`` — the
+    request uid and its token index — so retries, batch-mates, admission
+    order and pipelined execution all sample identically.  ``logits``
+    may be one row ``(V,)`` or a batch ``(B, V)`` with per-row
+    uid/ngen; both engines call this one function (the StreamEngine from
+    inside its emit), so host and device sampling share one code path.
+    """
+    logits = jnp.asarray(logits)
+    if temperature <= 0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    uid = jnp.asarray(uid, jnp.int32)
+    ngen = jnp.asarray(ngen, jnp.int32)
+
+    def one(lg, u, g):
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(seed), u), g
+        )
+        return jax.random.categorical(key, lg / temperature).astype(jnp.int32)
+
+    if logits.ndim == 1:
+        return one(logits, uid, ngen)
+    return jax.vmap(one)(logits, uid, ngen)
+
+
+class _EngineBase:
+    """Shared request bookkeeping + chunked prefill."""
+
     def __init__(self, params, cfg: ArchConfig, scfg: ServeConfig):
         assert not cfg.embeds_input, "engine serves token-input archs"
         self.params = params
         self.cfg = cfg
         self.scfg = scfg
-        self.cache = T.init_cache(cfg, scfg.max_batch, scfg.max_len)
         self.lengths = np.zeros(scfg.max_batch, np.int32)
         self.active: list[Request | None] = [None] * scfg.max_batch
         self.queue: deque[Request] = deque()
         self._uid = 0
-        self._rng = np.random.default_rng(scfg.seed)
-
-        self._decode = jax.jit(
-            partial(
-                T.decode_step, cfg=cfg, attn_impl=scfg.attn_impl,
-            )
-        )
+        # logits_at is passed traced (not static) so every ragged-tail
+        # length shares one compiled prefill per chunk width.
         self._prefill = jax.jit(
-            partial(
-                T.prefill_step, cfg=cfg, attn_impl=scfg.attn_impl,
-            ),
-            static_argnames=(),
+            partial(T.prefill_step, cfg=cfg, attn_impl=scfg.attn_impl)
         )
 
     # -- public API ----------------------------------------------------------
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int | None = None) -> Request:
         """Returns the request handle (its .done flag is the future)."""
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if len(prompt) >= self.scfg.max_len:
+            raise ValueError(
+                f"prompt length {len(prompt)} needs >= 1 free cache row; "
+                f"max_len={self.scfg.max_len}"
+            )
         req = Request(
             uid=self._uid,
-            prompt=np.asarray(prompt, np.int32),
+            prompt=prompt,
             max_new_tokens=max_new_tokens or self.scfg.max_new_tokens,
         )
         self._uid += 1
@@ -97,6 +155,9 @@ class Engine:
                 break
         return finished
 
+    def step(self) -> list[Request]:  # pragma: no cover - abstract
+        raise NotImplementedError
+
     # -- internals -----------------------------------------------------------
 
     def _free_slot(self) -> int | None:
@@ -105,15 +166,30 @@ class Engine:
                 return i
         return None
 
-    def _admit(self):
-        while self.queue:
-            slot = self._free_slot()
-            if slot is None:
-                return
-            req = self.queue.popleft()
-            self._prefill_into_slot(req, slot)
+    def _sample_host(self, logits_row: np.ndarray, uid: int, ngen: int) -> int:
+        if self.scfg.temperature <= 0:
+            # Same first-max tie-breaking as jnp.argmax in the device
+            # emit, without a per-slot device dispatch on the hot path.
+            return int(np.argmax(logits_row))
+        return int(
+            sample_token(
+                logits_row, self.scfg.temperature, self.scfg.seed, uid, ngen
+            )
+        )
 
-    def _prefill_into_slot(self, req: Request, slot: int):
+    def _prefill_single(self, req: Request) -> tuple[PyTree, bool]:
+        """Chunked prefill of one request into a fresh single-slot cache.
+
+        Full ``prefill_chunk``-sized chunks stream through the cache; the
+        ragged tail (``plen % prefill_chunk``) is padded to one masked
+        chunk whose logits are read at the last real position — one call
+        instead of one B=1 decode per tail token, which is where most of
+        a short prompt's TTFT went (see ``benchmarks/bench_serve.py``).
+        Samples the first token (ngen=0) and applies retirement to it:
+        EOS, a budget of 1, or a prompt at the ``max_len`` boundary
+        complete without ever occupying a batch slot.
+        Returns ``(single_cache, done)``.
+        """
         ck = self.scfg.prefill_chunk
         prompt = req.prompt
         plen = len(prompt)
@@ -125,52 +201,99 @@ class Engine:
             logits, single = self._prefill(
                 self.params, single, tokens=chunk, pos=c * ck
             )
-        # Tail tokens (plen % chunk) stream through single decode steps.
-        for t in range(full, plen):
-            logits, single = self._decode(
+        rem = plen - full
+        if rem:
+            # Pad the tail to one masked chunk — clamped to the cache
+            # end so the write can never clamp-and-corrupt earlier rows
+            # when max_len is not a multiple of the chunk size.
+            width = min(ck, self.scfg.max_len - full)
+            tail = np.zeros((1, width), np.int32)
+            tail[0, :rem] = prompt[full:]
+            logits, single = self._prefill(
                 self.params, single,
-                tokens=jnp.asarray(prompt[None, t]),
-                lengths=jnp.full((1,), t, jnp.int32),
+                tokens=jnp.asarray(tail), pos=full,
+                logits_at=jnp.asarray(rem - 1, jnp.int32),
             )
-        # Scatter this request's cache rows into the batch cache at `slot`.
-        def insert(batch_leaf, single_leaf):
-            return batch_leaf.at[:, slot].set(single_leaf[:, 0])
+        tok = self._sample_host(np.asarray(logits)[0], req.uid, 0)
+        req.out_tokens.append(tok)
+        done = (
+            len(req.out_tokens) >= req.max_new_tokens
+            or tok == self.scfg.eos_id
+            or plen + 1 >= self.scfg.max_len
+        )
+        return single, done
 
-        self.cache = jax.tree.map(insert, self.cache, single)
-        self.lengths[slot] = plen
-        self.active[slot] = req
-        tok = self._sample(np.asarray(logits)[0])
-        req.out_tokens.append(int(tok))
 
-    def _sample(self, logits: np.ndarray) -> int:
-        if self.scfg.temperature <= 0:
-            return int(np.argmax(logits))
-        p = np.exp(logits / self.scfg.temperature - np.max(logits))
-        p /= p.sum()
-        return int(self._rng.choice(len(p), p=p))
+class Engine(_EngineBase):
+    """Layer-sequential reference engine (monolithic jitted decode_step)."""
+
+    def __init__(self, params, cfg: ArchConfig, scfg: ServeConfig):
+        super().__init__(params, cfg, scfg)
+        self.cache = T.init_cache(cfg, scfg.max_batch, scfg.max_len)
+        self._decode = jax.jit(
+            partial(T.decode_step, cfg=cfg, attn_impl=scfg.attn_impl)
+        )
+
+    # -- internals -----------------------------------------------------------
+
+    def _admit(self) -> list[Request]:
+        finished = []
+        while self.queue:
+            slot = self._free_slot()
+            if slot is None:
+                break
+            req = self.queue.popleft()
+            single, done = self._prefill_single(req)
+            if done:
+                req.done = True
+                finished.append(req)
+                continue  # slot stays free for the next queued request
+            # Scatter this request's cache rows into the batch cache.
+            def insert(batch_leaf, single_leaf):
+                return batch_leaf.at[:, slot].set(single_leaf[:, 0])
+
+            self.cache = jax.tree.map(insert, self.cache, single)
+            self.lengths[slot] = len(req.prompt)
+            self.active[slot] = req
+        return finished
 
     def step(self) -> list[Request]:
         """Admit, one batched decode step, retire. Returns newly finished."""
-        self._admit()
+        finished = self._admit()
         slots = [i for i, r in enumerate(self.active) if r is not None]
         if not slots:
-            return []
-        # last token per active slot (prompt end or last generated)
+            return finished
+        # last token per active slot (prefill-sampled or last generated)
         tokens = np.zeros(self.scfg.max_batch, np.int32)
         for i in slots:
-            req = self.active[i]
-            tokens[i] = req.out_tokens[-1] if req.out_tokens else req.prompt[-1]
+            tokens[i] = self.active[i].out_tokens[-1]
         logits, self.cache = self._decode(
             self.params, self.cache,
             tokens=jnp.asarray(tokens),
             lengths=jnp.asarray(self.lengths),
         )
         logits = np.asarray(logits)
-        finished = []
+        if self.scfg.temperature > 0:
+            # One batched draw for all active slots (the same vmapped
+            # path the StreamEngine's emit uses) instead of a per-slot
+            # device dispatch on the decode hot path.
+            uids = np.array([self.active[i].uid for i in slots], np.int32)
+            ngens = np.array(
+                [len(self.active[i].out_tokens) for i in slots], np.int32
+            )
+            drawn = np.asarray(
+                sample_token(
+                    logits[slots], self.scfg.temperature, self.scfg.seed,
+                    uids, ngens,
+                )
+            )
+            sampled = dict(zip(slots, drawn))
+        else:
+            sampled = {i: np.argmax(logits[i]) for i in slots}
         for i in slots:
             req = self.active[i]
             self.lengths[i] += 1
-            tok = self._sample(logits[i])
+            tok = int(sampled[i])
             req.out_tokens.append(tok)
             hit_eos = tok == self.scfg.eos_id
             full = self.lengths[i] + 1 >= self.scfg.max_len
@@ -178,4 +301,298 @@ class Engine:
                 req.done = True
                 finished.append(req)
                 self.active[i] = None
+        return finished
+
+
+def _overlay_combine(flow, src):
+    """Entry-zip admission overlay: where ``gate`` is set, the slot's
+    row is replaced wholesale by the admitted request's state (its
+    prefill-sampled token, re-embedded hidden state, prompt length and
+    budget) — the outgoing retired occupant simply stops re-entering."""
+    gate = src["gate"]
+
+    def sel(f, a):
+        g = gate.reshape(gate.shape + (1,) * (f.ndim - 1))
+        return jnp.where(g, a, f)
+
+    out = dict(flow)
+    for k in ("x", "tok", "pos", "active", "uid", "ngen", "budget"):
+        out[k] = sel(flow[k], src[k])
+    return out
+
+
+class StreamEngine(_EngineBase):
+    """Decode as a pipelined ``Stream.feedback`` program.
+
+    One round = ``round_steps`` decode steps of all ``microbatches``
+    in-flight items, executed as a single device program: items flow
+    through ``num_cells`` layer-group cells, the emit (final-norm →
+    logits → sample → re-embed) feeds each item's token back in with lag
+    ``microbatches``, and admissions planned at round start (free slots,
+    plus slots whose budget provably retires mid-round) are installed by
+    the cells themselves the tick they first see the admission's item.
+    With ``mesh=None`` the same program runs under ``LazyEvaluator`` —
+    stream-shaped but layer-sequential, the pipelining ablation.
+    """
+
+    def __init__(
+        self,
+        params,
+        cfg: ArchConfig,
+        scfg: ServeConfig,
+        pcfg: DecodePipelineConfig | None = None,
+        mesh: jax.sharding.Mesh | None = None,
+    ):
+        super().__init__(params, cfg, scfg)
+        pcfg = pcfg or DecodePipelineConfig()
+        self.pcfg = pcfg
+        if scfg.max_batch % pcfg.microbatches != 0:
+            raise ValueError(
+                f"max_batch={scfg.max_batch} not divisible by "
+                f"microbatches={pcfg.microbatches}"
+            )
+        if pcfg.admit_per_round < 1:
+            raise ValueError(
+                "admit_per_round must be >= 1 (with 0 no request could "
+                "ever enter a slot and run_until_drained would spin)"
+            )
+        self.mb_size = scfg.max_batch // pcfg.microbatches
+        groups = cfg.num_layers // T.effective_period(cfg)
+        if groups % pcfg.num_cells != 0:
+            raise ValueError(
+                f"{groups} layer groups not divisible by "
+                f"num_cells={pcfg.num_cells}"
+            )
+        if mesh is None:
+            self.evaluator = LazyEvaluator()
+        else:
+            self.evaluator = FutureEvaluator(
+                mesh,
+                pcfg.axis_name,
+                schedule=pcfg.schedule,
+                interleave=pcfg.interleave,
+            )
+        self.cell_states = T.split_decode_cells(
+            params, T.init_cache(cfg, scfg.max_batch, scfg.max_len),
+            pcfg.num_cells,
+        )
+        self._cell_fn = T.make_decode_cell(
+            cfg,
+            params,
+            num_cells=pcfg.num_cells,
+            microbatch=self.mb_size,
+            attn_impl=scfg.attn_impl,
+            admissions=pcfg.admit_per_round,
+        )
+        self._emit = T.make_decode_emit(
+            params, cfg,
+            sample_fn=lambda lg, uid, ngen: sample_token(
+                lg, scfg.temperature, scfg.seed, uid, ngen
+            ),
+            eos_id=scfg.eos_id,
+            max_len=scfg.max_len,
+        )
+        self._zero_single = T.init_cache(cfg, 1, scfg.max_len)
+        self._embed = jax.jit(
+            lambda toks: L.embed_lookup(params["embed"]["embedding"], toks)
+        )
+        self._by_uid: dict[int, Request] = {}
+
+        t_, m_ = pcfg.round_steps, pcfg.microbatches
+
+        def _round(cell_states, init_items, overlay_items):
+            program = (
+                Stream.feedback(init_items, t_ * m_, self._emit)
+                .zip(Stream.source(overlay_items), _overlay_combine)
+                .through(self._cell_fn, cell_states)
+            )
+            res = program.collect(self.evaluator)
+            return res.states[0], res.items
+
+        self._round = jax.jit(_round)
+
+    @property
+    def cache(self) -> PyTree:
+        """The batch cache, re-merged from per-cell shards (inspection)."""
+        return T.merge_decode_caches(self.cell_states)
+
+    # -- round construction --------------------------------------------------
+
+    def _plan_admissions(self, t_: int):
+        """(slot, step, request) admissions for the coming round.
+
+        Free slots admit at step 0.  A slot whose occupant provably
+        exhausts its budget at round-local step k-1 is free at step k
+        (EOS may free it earlier — admitting at k is then merely late,
+        never wrong), so queued requests keep entering mid-flight.
+        Requests that retire on their prefill-sampled token never occupy
+        a slot.  Returns (admissions, finished_at_prefill).
+        """
+        import heapq
+
+        a_max = self.pcfg.admit_per_round
+        finished: list[Request] = []
+        admissions: list[tuple[int, int, Request, PyTree]] = []
+        events: list[tuple[int, int]] = []  # (step, slot), earliest first
+        for slot, req in enumerate(self.active):
+            if req is None:
+                events.append((0, slot))
+            else:
+                k = req.max_new_tokens - len(req.out_tokens)
+                if k < t_:
+                    events.append((k, slot))
+        heapq.heapify(events)
+        while self.queue and len(admissions) < a_max and events:
+            step, slot = heapq.heappop(events)
+            while self.queue:
+                req = self.queue.popleft()
+                single, done = self._prefill_single(req)
+                self._by_uid[req.uid] = req
+                if done:
+                    req.done = True
+                    finished.append(req)
+                    continue  # slot still free: try the next request
+                admissions.append((slot, step, req, single))
+                # This request may itself retire mid-round: its slot
+                # frees again once its remaining budget is spent.
+                k2 = step + (req.max_new_tokens - len(req.out_tokens))
+                if k2 < t_:
+                    heapq.heappush(events, (k2, slot))
+                break
+        return admissions, finished
+
+    def _build_round_inputs(self, admissions):
+        scfg, pcfg = self.scfg, self.pcfg
+        b_, m_, t_ = scfg.max_batch, pcfg.microbatches, pcfg.round_steps
+        bm = self.mb_size
+        tok = np.zeros(b_, np.int32)
+        active = np.zeros(b_, bool)
+        uid = np.zeros(b_, np.int32)
+        ngen = np.zeros(b_, np.int32)
+        budget = np.ones(b_, np.int32)
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok[slot] = req.out_tokens[-1]
+            active[slot] = True
+            uid[slot] = req.uid
+            ngen[slot] = len(req.out_tokens)
+            budget[slot] = req.max_new_tokens
+        x = np.asarray(self._embed(jnp.asarray(tok)))[:, None, :]
+        init_items = {
+            "x": jnp.asarray(x.reshape(m_, bm, 1, -1)),
+            "tok": jnp.asarray(tok.reshape(m_, bm)),
+            "pos": jnp.asarray(self.lengths.reshape(m_, bm)),
+            "active": jnp.asarray(active.reshape(m_, bm)),
+            "uid": jnp.asarray(uid.reshape(m_, bm)),
+            "ngen": jnp.asarray(ngen.reshape(m_, bm)),
+            "budget": jnp.asarray(budget.reshape(m_, bm)),
+            "mb": jnp.arange(m_, dtype=jnp.int32),
+            "step": jnp.zeros(m_, jnp.int32),
+        }
+
+        n = t_ * m_
+        ov = {
+            "gate": np.zeros((n, bm), bool),
+            "tok": np.zeros((n, bm), np.int32),
+            "pos": np.zeros((n, bm), np.int32),
+            "active": np.zeros((n, bm), bool),
+            "uid": np.zeros((n, bm), np.int32),
+            "ngen": np.zeros((n, bm), np.int32),
+            "budget": np.ones((n, bm), np.int32),
+        }
+        singles, slots, steps, mbs = [], [], [], []
+        for slot, step, req, single in admissions:
+            mb, row = divmod(slot, bm)
+            b = step * m_ + mb
+            ov["gate"][b, row] = True
+            ov["tok"][b, row] = req.out_tokens[-1]
+            ov["pos"][b, row] = len(req.prompt)
+            ov["active"][b, row] = True
+            ov["uid"][b, row] = req.uid
+            ov["ngen"][b, row] = len(req.out_tokens)
+            ov["budget"][b, row] = req.max_new_tokens
+            singles.append(single)
+            slots.append(slot)
+            steps.append(step)
+            mbs.append(mb)
+        # Pad the admission buffer to its static depth; step -1 never fires.
+        while len(singles) < self.pcfg.admit_per_round:
+            singles.append(self._zero_single)
+            slots.append(0)
+            steps.append(-1)
+            mbs.append(-1)
+        adm = T.stack_admission_payload(
+            singles, slots, steps, mbs, self.pcfg.num_cells
+        )
+        # Embed only the gated rows (at most admit_per_round of them) —
+        # everything else in the overlay is a zero the combine discards.
+        ov_x = np.zeros((n, bm, 1, x.shape[-1]), x.dtype)
+        gated = np.argwhere(ov["gate"])
+        if len(gated):
+            emb = np.asarray(
+                self._embed(jnp.asarray(ov["tok"][gated[:, 0], gated[:, 1]]))
+            )
+            ov_x[gated[:, 0], gated[:, 1], 0] = emb
+        overlay = {k: jnp.asarray(v) for k, v in ov.items()}
+        overlay["x"] = jnp.asarray(ov_x)
+        return init_items, overlay, adm
+
+    # -- the round -----------------------------------------------------------
+
+    def step(self) -> list[Request]:
+        """One pipelined round of ``round_steps`` decode steps."""
+        t_, m_ = self.pcfg.round_steps, self.pcfg.microbatches
+        bm = self.mb_size
+        admissions, finished = self._plan_admissions(t_)
+        for slot, req in enumerate(self.active):
+            if req is not None:
+                self._by_uid[req.uid] = req
+        if not admissions and all(r is None for r in self.active):
+            return finished
+        init_items, overlay, adm = self._build_round_inputs(admissions)
+        new_states, collected = self._round(
+            {**self.cell_states, "adm": adm}, init_items, overlay
+        )
+        # Drop the round's admission payload: keeping it in cell_states
+        # would pin admit_per_round full-length single-request caches as
+        # dead device memory between rounds.
+        self.cell_states = {k: v for k, v in new_states.items() if k != "adm"}
+        col = {
+            k: np.asarray(collected[k])
+            for k in ("tok", "pos", "active", "uid", "ngen")
+        }
+        # Walk emitted items in stream order; a row's token is real when
+        # its ngen is one past what the host has — frozen (retired) rows
+        # repeat their ngen and are skipped, exactly mirroring the emit.
+        for b in range(t_ * m_):
+            for r in range(bm):
+                req = self._by_uid.get(int(col["uid"][b, r]))
+                if req is None or req.done:
+                    continue
+                g = int(col["ngen"][b, r])
+                if g != len(req.out_tokens) + 1:
+                    continue
+                tok = int(col["tok"][b, r])
+                req.out_tokens.append(tok)
+                done = (
+                    g >= req.max_new_tokens
+                    or tok == self.scfg.eos_id
+                    or int(col["pos"][b, r]) + 1 >= self.scfg.max_len
+                )
+                if done:
+                    req.done = True
+                    finished.append(req)
+        # Host slot state syncs from each microbatch's final item.
+        for mb in range(m_):
+            b = (t_ - 1) * m_ + mb
+            for r in range(bm):
+                slot = mb * bm + r
+                self.lengths[slot] = int(col["pos"][b, r])
+                req = self._by_uid.get(int(col["uid"][b, r]))
+                live = bool(col["active"][b, r]) and req is not None and not req.done
+                self.active[slot] = req if live else None
+        self._by_uid = {
+            r.uid: r for r in self.active if r is not None
+        }
         return finished

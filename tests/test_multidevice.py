@@ -177,6 +177,26 @@ hlo7 = jax.jit(lambda: mkst().collect(fut).items).lower().compile().as_text()
 print("POLY_ZIP_NO_REPLICATION",
       ("all-reduce" not in hlo7) and ("all-gather" not in hlo7))
 
+# 5c2. the feedback/unfold combinator: Lazy == Future bitwise across the
+# schedule zoo (the serving decode loop's shape: emitted items re-enter
+# with lag = in-flight microbatches)
+fbcell = lambda s, x: (s + 1.0, jnp.tanh(x * 1.01) + s * 0.001)
+fbemit = lambda x: x * 0.9 + 1.0
+fbst = jnp.arange(8, dtype=jnp.float32)
+okf = True
+for lag, n in [(8, 24), (4, 16), (3, 14)]:
+    fbinit = jnp.linspace(0., 1., lag * 3).reshape(lag, 3)
+    mkfb = lambda _i=fbinit, _n=n: Stream.feedback(_i, _n, fbemit).through(fbcell, fbst)
+    rfl = mkfb().collect(LazyEvaluator())
+    for name, v in ZOO:
+        ev = FutureEvaluator(mesh, "pod", schedule=name, interleave=v)
+        rff = mkfb().collect(ev)
+        okf &= all(bool(jnp.all(x == y)) for x, y in
+                   zip(jax.tree.leaves(rfl.items), jax.tree.leaves(rff.items)))
+        okf &= all(bool(jnp.all(x == y)) for x, y in
+                   zip(jax.tree.leaves(rfl.states), jax.tree.leaves(rff.states)))
+print("FEEDBACK_ZOO", okf)
+
 # 5d. fused multiply-add x*y + z rides the accumulator source
 z7 = poly.from_dict({(1, 2, 3): 7, (0, 0, 1): 5}, 8, 6)
 fma = poly.to_dict(poly.times_into(x7, x7, z7, evaluator=fut, num_x_chunks=4,
@@ -268,6 +288,10 @@ def test_algebra_combinators_bitwise_across_schedules(report):
 
 def test_polynomial_two_source_zip_across_schedules(report):
     assert report["POLY_ZIP_ZOO"].startswith("True")
+
+
+def test_feedback_unfold_across_schedules(report):
+    assert report["FEEDBACK_ZOO"].startswith("True")
 
 
 def test_polynomial_zip_sources_not_replicated(report):

@@ -237,15 +237,169 @@ class TestInputValidation:
 
 
 class TestFromProgram:
-    def test_adapter_equivalence(self):
+    def test_adapter_equivalence_and_deprecation(self):
         prog = StreamProgram(_count_cell, jnp.arange(4, dtype=jnp.int32), 4)
         items = _items()
         st_legacy, out_legacy = evaluate(prog, items, LazyEvaluator())
-        res = Stream.from_program(prog, items).collect()
+        with pytest.warns(DeprecationWarning, match="from_program"):
+            res = Stream.from_program(prog, items).collect()
         np.testing.assert_array_equal(np.asarray(out_legacy), np.asarray(res.items))
         np.testing.assert_array_equal(
             np.asarray(st_legacy), np.asarray(res.states[0])
         )
+
+    def test_legacy_evaluate_path_does_not_warn(self):
+        """The StreamProgram adapter inside evaluate() builds the graph
+        directly — deprecation fires only on explicit from_program use."""
+        import warnings
+
+        prog = StreamProgram(_count_cell, jnp.arange(4, dtype=jnp.int32), 4)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            evaluate(prog, _items(), LazyEvaluator())
+
+
+class TestFeedback:
+    """The unfold combinator: item b >= lag is emit(out[b - lag])."""
+
+    def _emit(self, item):
+        return item * 0.5 + 1.0
+
+    def _reference(self, init, n, states0, emit):
+        from jax import lax
+
+        lag = init.shape[0]
+
+        def run_item(states, flow):
+            def c(fl, s):
+                ns, out = _count_cell(s, fl)
+                return out, ns
+
+            out, ns = lax.scan(c, flow, states)
+            return ns, out
+
+        ring = [init[i] for i in range(lag)]
+        states, outs = states0, []
+        for b in range(n):
+            inp = ring.pop(0) if b < lag else outs[b - lag]
+            states, raw = run_item(states, inp)
+            outs.append(emit(raw))
+        return jnp.stack(outs), states
+
+    @pytest.mark.parametrize("lag,n", [(1, 5), (3, 14), (4, 4)])
+    def test_lazy_matches_unrolled_reference(self, lag, n):
+        init = jnp.asarray(
+            np.random.default_rng(1).normal(size=(lag, 3)).astype(np.float32)
+        )
+        states0 = jnp.arange(4, dtype=jnp.int32)
+        res = (
+            Stream.feedback(init, n, self._emit)
+            .through(_count_cell, states0)
+            .collect(LazyEvaluator())
+        )
+        ref_items, ref_states = self._reference(init, n, states0, self._emit)
+        np.testing.assert_allclose(
+            np.asarray(res.items), np.asarray(ref_items), rtol=1e-6
+        )
+        np.testing.assert_array_equal(
+            np.asarray(res.states[0]), np.asarray(ref_states)
+        )
+
+    def test_entry_zip_overlay(self):
+        """An entry zip merges into fed-back items too (the admission
+        overlay): items where the source gates are replaced wholesale,
+        so their outputs depend only on the overlay value."""
+        from jax import lax
+
+        lag, n = 2, 8
+        init = jnp.ones((lag, 3))
+        overlay = jnp.where(
+            (jnp.arange(n) % 3 == 0)[:, None], jnp.full((n, 3), 5.0), 0.0
+        )
+        combine = lambda flow, src: jnp.where(src > 0, src, flow)
+        cell = lambda w, x: (w, jnp.tanh(x * w))  # stateless: directly checkable
+        weights = jnp.linspace(0.5, 1.5, 4)
+        res = (
+            Stream.feedback(init, n, self._emit)
+            .zip(Stream.source(overlay), combine)
+            .through(cell, weights, mutable_state=False)
+            .collect(LazyEvaluator())
+        )
+
+        def chain_one(x):
+            out, _ = lax.scan(lambda fl, w: (jnp.tanh(fl * w), w), x, weights)
+            return self._emit(out)
+
+        # gated items (0, 3, 6) — including the *fed-back* items 3 and 6
+        # — must equal running the chain on the overlay value alone.
+        expect = chain_one(jnp.full((3,), 5.0))
+        for b in (0, 3, 6):
+            np.testing.assert_allclose(
+                np.asarray(res.items[b]), np.asarray(expect), rtol=1e-6
+            )
+        # a non-gated fed-back item really is emit(chain(prev emitted))
+        np.testing.assert_allclose(
+            np.asarray(res.items[4]),
+            np.asarray(chain_one(res.items[2])),
+            rtol=1e-6,
+        )
+
+    def test_num_items_and_lag_validation(self):
+        with pytest.raises(ValueError, match="num_items"):
+            Stream.feedback(jnp.zeros((4, 2)), 3, self._emit)
+
+    def test_lazy_eval_graph_rejects_feedback(self):
+        s = Stream.feedback(jnp.zeros((2, 3)), 6, self._emit).through(
+            _count_cell, jnp.zeros(2, jnp.int32)
+        )
+        with pytest.raises(TypeError, match="node-local"):
+            G.lazy_eval_graph(s.node)
+
+    def test_emit_must_preserve_structure(self):
+        s = Stream.feedback(
+            jnp.zeros((2, 3)), 6, lambda item: {"changed": item}
+        ).through(_count_cell, jnp.zeros(2, jnp.int32))
+        with pytest.raises(ValueError, match="preserve the flowing item"):
+            s.collect(LazyEvaluator())
+
+    def test_tail_zip_rejected(self):
+        src = Stream.source(jnp.zeros((6, 3)))
+        s = (
+            Stream.feedback(jnp.zeros((2, 3)), 6, self._emit)
+            .through(_count_cell, jnp.zeros(2, jnp.int32))
+            .zip(src, lambda a, b: a + b)
+        )
+        with pytest.raises(ValueError, match="after the last cell"):
+            s.lower()
+
+    def test_tail_map_folds_into_emit(self):
+        """Maps after the last segment run before the emit — the
+        collected items are the emitted (post-tail-map) values."""
+        init = jnp.ones((2, 3))
+        base = Stream.feedback(init, 6, self._emit).through(
+            _count_cell, jnp.zeros(2, jnp.int32)
+        )
+        mapped = (
+            Stream.feedback(init, 6, lambda it: self._emit(it * 2.0))
+            .through(_count_cell, jnp.zeros(2, jnp.int32))
+        )
+        with_tail = (
+            Stream.feedback(init, 6, self._emit)
+            .through(_count_cell, jnp.zeros(2, jnp.int32))
+            .map(lambda x: x * 2.0)
+        )
+        a = with_tail.collect(LazyEvaluator()).items
+        b = mapped.collect(LazyEvaluator()).items
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert with_tail.lower().finalize is None
+
+    def test_plan_has_feedback_lag(self):
+        from repro.core.schedules import build_plan
+
+        p = build_plan("gpipe", 4, 16, feedback_lag=8)
+        assert p.feedback_lag == 8
+        # every (position, item) unit scheduled exactly once
+        assert int((p.microbatch >= 0).sum()) == 4 * 16
 
 
 class TestLowering:
