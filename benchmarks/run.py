@@ -9,12 +9,15 @@ uses the paper's sizes (Table 1: primes to 20000/60000, Fateman ^20).
 
 The pipeline suite additionally persists its (schedule x M) sweep —
 modeled vs measured — to ``BENCH_pipeline.json`` at the repo root, the
-perf-trajectory baseline future PRs diff against.  ``--check`` is the
-enforcement: it runs a fresh paired sweep, diffs every
-(schedule, devices, V, M) cell against the persisted baseline, and
-exits nonzero if any cell's wall-clock regressed by more than
+perf-trajectory baseline future PRs diff against; the serve suite
+persists ``BENCH_serve.json`` (tokens/sec + TTFT) and the train suite
+``BENCH_train.json`` (value_and_grad step time per schedule x M,
+autodiff vs planned backward).  ``--check`` is the enforcement: it
+runs a fresh paired sweep, diffs every cell against the persisted
+baselines (pipeline wall-clock, serve throughput, train wall-clock),
+and exits nonzero if any cell regressed by more than
 ``--check-tolerance`` (default 10%) — the perf gate perf-sensitive PRs
-run before merging.  ``--check`` does not overwrite the baseline;
+run before merging.  ``--check`` does not overwrite the baselines;
 re-run without it to re-baseline intentionally.
 """
 from __future__ import annotations
@@ -32,6 +35,7 @@ from benchmarks import (
     bench_primes,
     bench_roofline,
     bench_serve,
+    bench_train,
 )
 
 SUITES = {
@@ -41,6 +45,7 @@ SUITES = {
     "pipeline": bench_pipeline,  # bubble model (DESIGN §2)
     "roofline": bench_roofline,  # §Roofline table from dry-run artifacts
     "serve": bench_serve,        # Stream-shaped serving (tok/s + TTFT)
+    "train": bench_train,        # autodiff vs planned backward step time
 }
 
 _ROOT = os.path.normpath(
@@ -48,6 +53,7 @@ _ROOT = os.path.normpath(
 )
 BASELINE_PATH = os.path.join(_ROOT, "BENCH_pipeline.json")
 SERVE_BASELINE_PATH = os.path.join(_ROOT, "BENCH_serve.json")
+TRAIN_BASELINE_PATH = os.path.join(_ROOT, "BENCH_train.json")
 
 
 def _cell_key(record: dict) -> tuple:
@@ -146,6 +152,106 @@ def check_serve_regressions(
     return out
 
 
+def _train_cell_key(record: dict) -> tuple:
+    """Identity of one train sweep cell (schedule x backward x M)."""
+    return (
+        record.get("schedule"),
+        record.get("backward"),
+        record.get("devices"),
+        record.get("interleave"),
+        record.get("num_microbatches"),
+        record.get("dim"),
+        record.get("rows"),
+    )
+
+
+def check_train_regressions(
+    baseline: list[dict], fresh: list[dict], tolerance: float
+) -> list[dict]:
+    """Train-step cells whose wall-clock regressed past ``tolerance`` —
+    the autodiff-vs-planned backward sweep instance of the shared
+    gate."""
+    out = _regressions(
+        baseline, fresh, _train_cell_key, "measured_seconds", tolerance,
+        higher_is_better=False,
+        report_fields=("schedule", "backward", "num_microbatches"),
+    )
+    for r in out:
+        r["baseline_seconds"] = r.pop("baseline_measured_seconds")
+        r["measured_seconds"] = r.pop("measured_measured_seconds")
+    return out
+
+
+# The gated suites: (module, baseline path, cell-key fn, comparison fn,
+# the metric a record must carry to be comparable, one-line regression
+# formatter).  One table + one driver instead of a copy-pasted block
+# per suite; adding a gate is adding a row.
+GATES = {
+    "pipeline": (
+        lambda: bench_pipeline, BASELINE_PATH, _cell_key, check_regressions,
+        "measured_seconds",
+        lambda r: (
+            f"# REGRESSION pipeline {r['schedule']} D={r['devices']} "
+            f"V={r['interleave']} M={r['num_microbatches']}: "
+            f"{r['baseline_seconds']*1e3:.2f}ms -> "
+            f"{r['measured_seconds']*1e3:.2f}ms ({r['ratio']:.2f}x)"
+        ),
+    ),
+    "serve": (
+        lambda: bench_serve, SERVE_BASELINE_PATH, _serve_cell_key,
+        check_serve_regressions, "tokens_per_sec",
+        lambda r: (
+            f"# REGRESSION serve {r['engine']} b={r['batch']}: "
+            f"{r['baseline_tok_s']:.1f} -> {r['measured_tok_s']:.1f} "
+            f"tok/s ({r['ratio']:.2f}x)"
+        ),
+    ),
+    "train": (
+        lambda: bench_train, TRAIN_BASELINE_PATH, _train_cell_key,
+        check_train_regressions, "measured_seconds",
+        lambda r: (
+            f"# REGRESSION train {r['schedule']} {r['backward']} "
+            f"M={r['num_microbatches']}: "
+            f"{r['baseline_seconds']*1e3:.2f}ms -> "
+            f"{r['measured_seconds']*1e3:.2f}ms ({r['ratio']:.2f}x)"
+        ),
+    ),
+}
+
+
+def _run_gate(label: str, tolerance: float, full: bool) -> int:
+    """Run one suite fresh and diff it against its persisted baseline.
+
+    Returns 0 clean, 1 on regression, 2 when nothing was comparable
+    (size mismatch between the fresh run and the baseline).
+    """
+    module_fn, path, key_fn, check_fn, metric, fmt = GATES[label]
+    module = module_fn()
+    with open(path) as f:
+        baseline = json.load(f)["sweep"]
+    for row in module.run(quick=not full):
+        print(row)
+    fresh = getattr(module.run, "records", [])
+    compared = {
+        key_fn(r) for r in fresh if metric in r
+    } & {key_fn(r) for r in baseline if metric in r}
+    regressions = check_fn(baseline, fresh, tolerance)
+    print(
+        f"# --check {label}: {len(compared)} cells compared, "
+        f"{len(regressions)} regressed beyond {tolerance:.0%}",
+        file=sys.stderr,
+    )
+    if not compared:
+        print(
+            f"# --check {label}: no comparable cells (size mismatch?)",
+            file=sys.stderr,
+        )
+        return 2
+    for r in regressions:
+        print(fmt(r), file=sys.stderr)
+    return 1 if regressions else 0
+
+
 def run_check(tolerance: float, full: bool) -> int:
     if not os.path.exists(BASELINE_PATH):
         print(
@@ -154,65 +260,19 @@ def run_check(tolerance: float, full: bool) -> int:
             file=sys.stderr,
         )
         return 2
-    with open(BASELINE_PATH) as f:
-        baseline = json.load(f)["sweep"]
-    for row in bench_pipeline.run(quick=not full):
-        print(row)
-    fresh = getattr(bench_pipeline.run, "records", [])
-    compared = {
-        _cell_key(r) for r in fresh
-    } & {_cell_key(r) for r in baseline}
-    regressions = check_regressions(baseline, fresh, tolerance)
-    print(
-        f"# --check: {len(compared)} cells compared against baseline, "
-        f"{len(regressions)} regressed beyond {tolerance:.0%}",
-        file=sys.stderr,
-    )
-    for r in regressions:
-        print(
-            f"# REGRESSION {r['schedule']} D={r['devices']} "
-            f"V={r['interleave']} M={r['num_microbatches']}: "
-            f"{r['baseline_seconds']*1e3:.2f}ms -> "
-            f"{r['measured_seconds']*1e3:.2f}ms ({r['ratio']:.2f}x)",
-            file=sys.stderr,
-        )
-    if not compared:
-        print("# --check: no comparable cells (size mismatch?)", file=sys.stderr)
+    # Every baselined gate runs — one incomparable baseline must not
+    # mask a real regression in a later suite.  Regression (1) outranks
+    # incomparability (2) in the aggregate exit code.
+    rcs = []
+    for label in GATES:
+        if label != "pipeline" and not os.path.exists(GATES[label][1]):
+            continue  # ride-along gates only run once baselined
+        rcs.append(_run_gate(label, tolerance, full))
+    if 1 in rcs:
+        return 1
+    if 2 in rcs:
         return 2
-    rc = 1 if regressions else 0
-    # Serve gate rides along whenever its baseline exists.
-    if os.path.exists(SERVE_BASELINE_PATH):
-        with open(SERVE_BASELINE_PATH) as f:
-            serve_base = json.load(f)["sweep"]
-        for row in bench_serve.run(quick=not full):
-            print(row)
-        serve_fresh = getattr(bench_serve.run, "records", [])
-        serve_compared = {
-            _serve_cell_key(r) for r in serve_fresh if "tokens_per_sec" in r
-        } & {_serve_cell_key(r) for r in serve_base if "tokens_per_sec" in r}
-        serve_reg = check_serve_regressions(serve_base, serve_fresh, tolerance)
-        print(
-            f"# --check serve: {len(serve_compared)} cells compared, "
-            f"{len(serve_reg)} regressed beyond {tolerance:.0%}",
-            file=sys.stderr,
-        )
-        if not serve_compared:
-            print(
-                "# --check serve: no comparable cells (size mismatch?)",
-                file=sys.stderr,
-            )
-            # an already-detected pipeline regression (rc=1) outranks
-            # the serve gate's "couldn't compare" signal
-            return rc or 2
-        for r in serve_reg:
-            print(
-                f"# REGRESSION serve {r['engine']} b={r['batch']}: "
-                f"{r['baseline_tok_s']:.1f} -> {r['measured_tok_s']:.1f} "
-                f"tok/s ({r['ratio']:.2f}x)",
-                file=sys.stderr,
-            )
-        rc = rc or (1 if serve_reg else 0)
-    return rc
+    return 0
 
 
 def main() -> None:
@@ -250,14 +310,9 @@ def main() -> None:
             for row in rows:
                 print(row)
             sys.stdout.flush()
-            if name == "pipeline":
+            if name in GATES:
                 _write_baseline(
-                    BASELINE_PATH, getattr(SUITES[name].run, "records", [])
-                )
-            elif name == "serve":
-                _write_baseline(
-                    SERVE_BASELINE_PATH,
-                    getattr(SUITES[name].run, "records", []),
+                    GATES[name][1], getattr(SUITES[name].run, "records", [])
                 )
         except Exception as e:  # noqa: BLE001
             failed.append((name, e))

@@ -18,6 +18,12 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--big", action="store_true", help="~100M params")
     ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--pipeline-schedule", default="one_f_one_b",
+                    choices=["gpipe", "one_f_one_b", "interleaved"])
+    ap.add_argument("--pipeline-backward", default="planned",
+                    choices=["autodiff", "planned"],
+                    help="true-1F1B custom-VJP backward (planned) or the "
+                         "jax.grad transpose of the forward plan")
     args = ap.parse_args()
 
     if args.big:
@@ -32,6 +38,10 @@ def main():
             "--steps", str(args.steps or 200), "--global-batch", "8",
             "--seq-len", "256", "--microbatches", "2",
         ]
+    argv += [
+        "--pipeline-schedule", args.pipeline_schedule,
+        "--pipeline-backward", args.pipeline_backward,
+    ]
     history = train_main(argv)
     first = sum(h["loss"] for h in history[:10]) / 10
     last = sum(h["loss"] for h in history[-10:]) / 10

@@ -12,6 +12,15 @@ from typing import Any
 
 import jax.numpy as jnp
 
+# Pipeline-training backward modes (``pipeline_backward`` on
+# TrainConfig / ``backward`` on PipelineConfig): "autodiff" lets
+# jax.grad transpose the forward tick plan; "planned" executes the
+# combined plan's B units as first-class scheduled work (true 1F1B —
+# the custom-VJP FutureEvaluator path).  Canonical definition lives in
+# repro.core.schedules (the schedule layer owns the modes); re-exported
+# here so config-level code never imports the executor.
+from repro.core.schedules import BACKWARD_MODES as PIPELINE_BACKWARD_MODES  # noqa: F401
+
 
 @dataclasses.dataclass(frozen=True)
 class MoEConfig:

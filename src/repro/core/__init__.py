@@ -16,6 +16,9 @@ Public API:
   Future, defer, HostFuture, collective futures
   SchedulePlan, build_plan (the schedule zoo: gpipe / one_f_one_b /
   interleaved; multi-source feed carousels via inject_positions)
+  CombinedPlan, build_combined_plan, build_backward_plan — training
+  backward as first-class scheduled units (true 1F1B; executed by
+  FutureEvaluator(backward="planned"), modes in BACKWARD_MODES)
   ChunkPolicy, bubble_fraction, optimal_num_chunks, optimal_schedule
   PipelineConfig, pipeline_apply
 """
@@ -39,7 +42,15 @@ from repro.core.graph import (
     StreamResult,
     lower_chain,
 )
-from repro.core.schedules import SCHEDULES, SchedulePlan, build_plan
+from repro.core.schedules import (
+    BACKWARD_MODES,
+    SCHEDULES,
+    CombinedPlan,
+    SchedulePlan,
+    build_backward_plan,
+    build_combined_plan,
+    build_plan,
+)
 from repro.core.future import (
     Future,
     HostFuture,
@@ -62,8 +73,10 @@ from repro.core.stream import (
 )
 
 __all__ = [
+    "BACKWARD_MODES",
     "ChainProgram",
     "ChunkPolicy",
+    "CombinedPlan",
     "Future",
     "FutureEvaluator",
     "HostFuture",
@@ -77,6 +90,8 @@ __all__ = [
     "StreamResult",
     "all_gather_future",
     "bubble_fraction",
+    "build_backward_plan",
+    "build_combined_plan",
     "build_plan",
     "chunk_axis",
     "defer",

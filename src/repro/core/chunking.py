@@ -35,6 +35,18 @@ memory: :func:`feed_peak_items` models each source's round-robin shard
 plus carousel register, :func:`schedule_peak_items` charges extra
 sources against the activation stash, and :func:`optimal_schedule`
 takes ``num_sources`` so the budget constraint sees the feeds.
+
+The peak-memory term is parameterized by the backward mode
+(``backward="planned" | "autodiff"``): under the planned backward
+(:func:`repro.core.schedules.build_combined_plan` executed by
+``FutureEvaluator(backward="planned")``) each schedule's stash bound —
+1F1B's ``min(S, M)`` — is measured from the combined plan's
+stash/release columns, not assumed; it is the schedule-level bound a
+fused executor realizes (the shipped two-phase custom-VJP realization
+still holds ``V*M`` at the XLA autodiff phase boundary — see
+``CombinedPlan``).  Autodiff training keeps every unit input live
+regardless of schedule, so all schedules cost ``V*M`` and a memory
+budget cannot prefer one.
 """
 from __future__ import annotations
 
@@ -106,14 +118,25 @@ def schedule_peak_items(
     num_chunks: int,
     interleave: int = 1,
     num_sources: int = 1,
+    backward: str = "planned",
 ) -> int:
-    """Peak per-device activation stash (in microbatches) under autodiff
-    training — the schedule's memory term (delegates to the single
-    definition in :mod:`repro.core.schedules`).  ``num_sources > 1``
-    adds the extra sources' feed storage (multi-injection plans: one
-    round-robin shard plus one carousel register per extra source)."""
+    """Peak per-device activation stash (in microbatches) — the
+    schedule's memory term (delegates to the single definition in
+    :mod:`repro.core.schedules`).
+
+    ``backward="planned"`` (default) is the combined plan's own peak —
+    the *schedule-level* bound proven by its stash/release columns,
+    realized in full by a fused executor (the shipped two-phase
+    custom-VJP realization still holds all ``V*M`` stashes at the XLA
+    fwd/bwd phase boundary; see
+    :class:`repro.core.schedules.CombinedPlan`); ``backward="autodiff"``
+    charges the ``V*M`` that transposing the forward scan keeps live
+    for *every* schedule.  ``num_sources >
+    1`` adds the extra sources' feed storage (multi-injection plans:
+    one round-robin shard plus one carousel register per extra
+    source)."""
     return peak_inflight_items(
-        schedule, num_stages, num_chunks, interleave, num_sources
+        schedule, num_stages, num_chunks, interleave, num_sources, backward
     )
 
 
@@ -244,6 +267,7 @@ def optimal_schedule(
     handoff: int = DEFAULT_HANDOFF,
     num_sources: int = 1,
     chunks_divide: int | None = None,
+    backward: str = "autodiff",
 ) -> ScheduleChoice:
     """Pick (schedule, M, V) jointly: minimize modeled step time subject
     to a peak-activation budget.
@@ -252,6 +276,17 @@ def optimal_schedule(
     stash measured in units of the *whole* item's activation footprint
     (gpipe always costs exactly 1.0; 1F1B costs S/M once M > S, which is
     how it buys bigger M under a budget).  ``None`` means unconstrained.
+    ``backward`` selects whose stash is scored, and must match the
+    job's actual execution mode.  ``"autodiff"`` (default — matching
+    ``TrainConfig.pipeline_backward``) charges every schedule the full
+    ``V*M`` the scan transpose keeps live, under which no schedule buys
+    memory and a tight budget is simply infeasible — the honest answer
+    for a default-configured job.  ``"planned"`` scores each schedule's
+    combined-plan peak — 1F1B's ``min(S, M)`` advantage, real under
+    ``FutureEvaluator(backward="planned")``.  (The *descriptive*
+    :func:`schedule_peak_items` keeps ``"planned"`` as its default: it
+    characterizes the schedule itself; this function makes a decision
+    against a budget, so it defaults conservative.)
     ``num_sources > 1`` charges multi-injection feed storage against the
     same budget (more sources push toward schedules that stash less).
     ``chunks_divide`` restricts M to divisors of it (a global batch must
@@ -298,7 +333,10 @@ def optimal_schedule(
         for m in seen:
             if memory_budget_items is not None:
                 peak = (
-                    schedule_peak_items(name, num_stages, m, v, num_sources) / m
+                    schedule_peak_items(
+                        name, num_stages, m, v, num_sources, backward
+                    )
+                    / m
                 )
                 if peak > memory_budget_items:
                     continue
@@ -311,7 +349,9 @@ def optimal_schedule(
                 interleave=v,
                 modeled_time=t,
                 bubble=schedule_bubble_fraction(name, num_stages, m, v, handoff),
-                peak_items=schedule_peak_items(name, num_stages, m, v, num_sources),
+                peak_items=schedule_peak_items(
+                    name, num_stages, m, v, num_sources, backward
+                ),
             )
             if best is None or cand.modeled_time < best.modeled_time:
                 best = cand

@@ -9,16 +9,21 @@ slow inter-pod links of the production mesh.
 The forward schedule is pluggable (:mod:`repro.core.schedules`):
 
 * ``gpipe`` — fill/drain, bubble ``h(S-1)/(M + h(S-1))``;
-* ``one_f_one_b`` — same executed forward, 1F1B memory model
-  (steady-state stash ``min(S, M)`` microbatches instead of ``M``);
+* ``one_f_one_b`` — 1F1B: under ``backward="planned"`` the combined
+  plan interleaves F and B units and bounds the stash at ``min(S, M)``
+  microbatches instead of ``M``;
 * ``interleaved`` — each device owns ``interleave`` non-contiguous layer
   groups, bubble ``h(S-1)/(V·M + h(S-1))``.
 
-Since every construct used (scan, ring ppermute futures, where, dynamic
-slicing) is differentiable, ``jax.grad`` through :func:`pipeline_apply`
-yields the reversed backward pipeline automatically, with per-(cell,
-item) rematerialization when ``remat=True`` — activation memory is
-O(microbatch) instead of O(global batch).
+The backward is pluggable too (``PipelineConfig.backward``).  Every
+construct used (scan, ring ppermute futures, where, dynamic slicing) is
+differentiable, so with ``"autodiff"`` ``jax.grad`` through
+:func:`pipeline_apply` yields the reversed backward pipeline
+automatically, with per-(cell, item) rematerialization when
+``remat=True``.  With ``"planned"`` the backward is itself a scheduled
+computation: a custom VJP replays the combined plan's B units over the
+same ring (bitwise-equal gradients; group-level rematerialization is
+inherent).
 
 Bubble accounting comes from :mod:`repro.core.chunking`: choose the
 (schedule, microbatch count) pair with
@@ -51,11 +56,17 @@ class PipelineConfig:
     # groups; num_stages must stay divisible by (axis size * interleave).
     schedule: str = "gpipe"
     interleave: int = 1
+    # How jax.grad flows through the pipeline: "autodiff" transposes the
+    # forward tick scan; "planned" runs the combined plan's B units as
+    # first-class scheduled work (custom VJP, bitwise-equal gradients) —
+    # see repro.core.schedules.build_combined_plan.
+    backward: str = "autodiff"
 
     def __post_init__(self):
-        from repro.core.schedules import validate_schedule
+        from repro.core.schedules import validate_backward, validate_schedule
 
         validate_schedule(self.schedule, self.interleave)
+        validate_backward(self.backward)
         if self.num_stages % self.interleave != 0:
             raise ValueError(
                 f"num_stages={self.num_stages} not divisible by "
@@ -74,6 +85,20 @@ class PipelineConfig:
             self.num_microbatches,
             self.interleave,
             handoff=1,
+        )
+
+    @property
+    def peak_stash_items(self) -> int:
+        """Peak concurrently-stashed activations (in microbatches) per
+        device under this config's backward mode — the combined plan's
+        own stash bound for "planned", the scan transpose's V*M for
+        "autodiff"."""
+        return chunking.schedule_peak_items(
+            self.schedule,
+            self.num_stages // self.interleave,
+            self.num_microbatches,
+            self.interleave,
+            backward=self.backward,
         )
 
 
@@ -112,6 +137,7 @@ def pipeline_apply(
             config.axis_name,
             schedule=config.schedule,
             interleave=config.interleave,
+            backward=config.backward,
         )
     out = stream.collect(evaluator).items
     return chunking.unchunk_axis(out)

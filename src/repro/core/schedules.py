@@ -60,6 +60,81 @@ admitting the stream's own next steps (and, via an entry-zip overlay
 source, freshly prefilled requests into retired slots) tick after tick.
 With ``L >= handoff * D`` (e.g. 8 in-flight microbatches on 4 devices)
 the steady state is bubble-free.
+
+**Combined (training) plans** — :func:`build_combined_plan` schedules
+the backward pass as first-class units in the *same* tick table instead
+of leaving it to whatever ``jax.grad`` derives from the forward plan.
+Unit kinds are ``F`` (forward), ``B`` (backward) and — with
+``split_backward=True`` — ``W`` (weight grad, the zero-bubble 3-way
+split; see ``UNIT_F``/``UNIT_B``/``UNIT_W``).  Under ``one_f_one_b``
+the builder interleaves F and B in true 1F1B order by capping each
+device's live activation stash, so the plan's own stash/release columns
+bound peak concurrently-stashed activations at ``V * min(S, M)`` items
+(``min(S, M)`` for the plain V=1 schedule) versus ``M`` for gpipe's
+fill-then-drain.  The executed realization is
+``FutureEvaluator(..., backward="planned")`` — see
+:class:`CombinedPlan` for how the plan's combined schedule relates to
+the custom-VJP two-phase execution.
+
+The tick-plan column contract
+=============================
+
+This section is the single normative description of the tables a
+:class:`SchedulePlan` hands to the executor
+(:class:`repro.core.stream.FutureEvaluator`); the executor's and
+chunking model's docstrings refer here instead of restating it.
+All tables have shape ``(num_ticks, num_stages)`` and are consumed as
+``lax.scan`` xs rows, except the feed columns, which are tick-indexed
+(``(num_sources, num_ticks)``).
+
+Per-device unit columns
+    ``microbatch[t, d]`` is the item device ``d`` advances at tick
+    ``t`` (-1 = idle; idle ticks still run the ring send, and their
+    outputs are never stored or collected).  ``group[t, d]`` selects
+    which of the device's ``V`` local cell groups applies (virtual
+    stage ``group * D + d``).  ``collect[t, d]`` marks final-position
+    units: the produced item is a result (written to the last device's
+    output block) and, under feedback, also the value that re-enters
+    the chain.
+
+Hand-off columns (the in-flight ring buffers)
+    A value computed at tick ``t`` on device ``d`` is ppermute'd during
+    tick ``t+1`` (overlapping that tick's compute — the Future) and is
+    consumable on device ``(d+1) % D`` at ``t+2`` (= ``handoff``).
+    ``recv_slot[t, d]`` says where the value *arriving* at tick ``t``
+    is parked (-1 = discard); ``read_slot[t, d]`` says which parked
+    slot this tick's unit consumes (-1 = the input is a fresh
+    injection from the feed registers instead).  Slots are per-device
+    interval-graph colors (:func:`_allocate_slots`), so ``num_slots``
+    is exactly the peak number of concurrently in-flight hand-offs.
+
+Feed columns (one carousel per source)
+    Source ``s`` is round-robin sharded over the stage axis with
+    rotation offset ``inject_devices[s]`` and circulates one register
+    per device on the reverse ring.  ``src_feed_reload[s, t]`` = load
+    the local shard row ``src_feed_idx[s, t]`` into the register;
+    ``src_feed_advance[s, t]`` = rotate the ring one hop after this
+    tick; ``src_consume[s, t]`` = the register on device
+    ``inject_devices[s]`` is merged into the flow this tick (for the
+    primary source that *is* the unit input; for zip sources it is
+    combined in).  Reloads happen every D-th consumption.
+
+Feedback arcs
+    Under ``feedback_lag=L`` the final position's output is itself a
+    hand-off: it rides the same one-hop ring (device D-1 → 0) into a
+    device-0 slot recorded in ``recv_slot``, and the entry unit
+    ``(0, m)`` for ``m >= L`` has ``read_slot >= 0`` — a fed-back
+    entry — instead of a carousel consume.
+
+Stash/release columns (combined plans only)
+    :class:`CombinedPlan` adds ``stash_slot[t, d]`` (the per-device
+    stash color an F unit's input activation is saved into; -1
+    elsewhere) and ``release_slot[t, d]`` (the color freed once the
+    matching B — or W, when split — unit has consumed it).  Colors are
+    the same smallest-free interval allocation as the hand-off slots,
+    so ``num_stash_slots`` equals the peak number of concurrently
+    stashed activations; :meth:`CombinedPlan.peak_stash_items` recomputes
+    that peak directly from the columns.
 """
 from __future__ import annotations
 
@@ -68,6 +143,26 @@ import dataclasses
 import numpy as np
 
 SCHEDULES = ("gpipe", "one_f_one_b", "interleaved")
+
+# How the training backward pass is executed against a forward plan:
+# "autodiff" lets jax.grad transpose the forward tick scan (every
+# schedule then stashes all V*M unit inputs per device); "planned" runs
+# the combined plan's B units through the custom-VJP executor
+# (FutureEvaluator(backward="planned")), whose schedule-level stash is
+# the combined plan's own peak.  Canonical home of the mode names —
+# configs.base re-exports them.
+BACKWARD_MODES = ("autodiff", "planned")
+
+# Unit kinds of a combined plan's tick table.
+UNIT_F, UNIT_B, UNIT_W = 0, 1, 2
+
+
+def validate_backward(mode: str) -> str:
+    if mode not in BACKWARD_MODES:
+        raise ValueError(
+            f"unknown backward mode {mode!r}; expected one of {BACKWARD_MODES}"
+        )
+    return mode
 
 # Hand-off latency of the evaluator's issue-early/force-late ring: an
 # output computed at tick t is ppermute'd *during* tick t+1 (overlapping
@@ -79,33 +174,15 @@ DEFAULT_HANDOFF = 2
 class SchedulePlan:
     """Host-built tick tables for one (schedule, D, M, V) instance.
 
-    Arrays of shape ``(num_ticks, num_stages)`` unless noted:
-
-    Attributes:
-      microbatch: microbatch worked by device d at tick t; -1 = idle.
-      group: local cell-group (virtual stage) index in ``[0, V)``.
-      read_slot: in-flight buffer slot the input comes from; -1 = inject
-        a fresh item (only ever -1 where ``group == 0`` on device 0).
-      recv_slot: slot in which the value *arriving* at tick t (sent by
-        the ring predecessor during tick t) is stored; -1 = discard.
-      collect: 1 where the produced output is a final result (only on
-        device D-1, which owns the last virtual stage).
-      inject / feed_reload / feed_advance: shape ``(num_ticks,)`` —
-        item-feed carousel control for the primary source (see
-        stream.py); ``feed_idx`` is the local item-shard index reloaded
-        when ``feed_reload`` is set.  Aliases of row 0 of the
-        generalized per-source tables below.
-      inject_positions: one virtual-stage position per source; position
-        0 is the chain entry.  Source *s* lives round-robin-sharded with
-        offset ``inject_devices[s]`` and is delivered by its own
-        reverse-ring carousel.
-      inject_devices: ``inject_positions[s] % num_stages`` — the device
-        that consumes source s.
-      src_feed_reload / src_feed_idx / src_feed_advance / src_consume:
-        shape ``(num_sources, num_ticks)`` — per-source carousel
-        columns; ``src_consume[s, t]`` is 1 when source s's next item is
-        merged into the flow at tick t (on device ``inject_devices[s]``).
-      num_slots: in-flight buffer depth K (1 for gpipe, ~V interleaved).
+    Column semantics are defined once, in "The tick-plan column
+    contract" section of this module's docstring — per-device unit
+    columns (``microbatch``/``group``/``collect``), hand-off slots
+    (``read_slot``/``recv_slot``/``num_slots``), per-source feed
+    carousels (``src_feed_reload``/``src_feed_idx``/
+    ``src_feed_advance``/``src_consume``, with ``inject``/``feed_*``
+    aliasing source 0), and feedback arcs.  ``inject_positions`` /
+    ``inject_devices`` give each source's virtual-stage position and
+    consuming device.
     """
 
     name: str
@@ -148,7 +225,9 @@ class SchedulePlan:
     @property
     def peak_inflight_items(self) -> int:
         """Modeled peak per-device activation stash (microbatches) under
-        autodiff training — the schedule's memory term."""
+        the schedule's own (planned-backward) combined plan — the
+        schedule's memory term; see :func:`peak_inflight_items` for the
+        autodiff-mode variant."""
         return peak_inflight_items(
             self.name,
             self.num_stages,
@@ -164,21 +243,35 @@ def peak_inflight_items(
     num_microbatches: int,
     interleave: int = 1,
     num_sources: int = 1,
+    backward: str = "planned",
 ) -> int:
-    """Peak per-device activation stash (microbatches) under autodiff
-    training.  Single source of truth — chunking.schedule_peak_items and
+    """Peak per-device activation stash (microbatches) under training.
+    Single source of truth — chunking.schedule_peak_items and
     SchedulePlan.peak_inflight_items both delegate here.
 
-    gpipe stashes every microbatch; 1F1B's steady state holds at most S;
-    interleaved (Megatron 1F1B-style) holds one warm-up window per
-    virtual chunk.  Every source past the first adds its feed storage —
-    a local round-robin shard of ceil(M/S) items plus the one-item
-    carousel register — measured in the same whole-item unit (the
-    primary source's feed predates this model and is treated as part of
-    the input batch, not the schedule's stash).
+    ``backward="planned"`` scores the schedule's *own* combined plan
+    (:func:`build_combined_plan`): gpipe fill-then-drain stashes every
+    unit input (``V*M``); 1F1B's interleaved F/B steady state holds at
+    most ``min(S, M)``; interleaved holds ``V * min(S, M)``.  These
+    closed forms are exact against the combined plans' stash/release
+    columns (tested over the grid).  ``backward="autodiff"`` is the
+    degraded truth of letting ``jax.grad`` transpose the forward scan:
+    the fwd/bwd phase boundary keeps **all** ``V*M`` unit inputs live
+    regardless of schedule name — before the planned backward existed,
+    1F1B's ``min(S, M)`` was a modeling assumption the execution never
+    realized.
+
+    Every source past the first adds its feed storage — a local
+    round-robin shard of ceil(M/S) items plus the one-item carousel
+    register — measured in the same whole-item unit (the primary
+    source's feed predates this model and is treated as part of the
+    input batch, not the schedule's stash).
     """
     v = validate_schedule(name, interleave)
+    validate_backward(backward)
     feed = (num_sources - 1) * feed_items_per_source(num_stages, num_microbatches)
+    if backward == "autodiff":
+        return v * num_microbatches + feed
     if name == "one_f_one_b":
         return min(num_microbatches, num_stages) + feed
     if name == "interleaved":
@@ -487,4 +580,334 @@ def build_plan(
         src_feed_advance=src_feed_advance,
         src_consume=src_consume,
         feedback_lag=feedback_lag,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Combined forward+backward plans (true 1F1B; ZB 3-way groundwork)
+# ---------------------------------------------------------------------------
+
+
+def build_backward_plan(
+    name: str,
+    num_stages: int,
+    num_microbatches: int,
+    interleave: int = 1,
+    handoff: int = DEFAULT_HANDOFF,
+) -> SchedulePlan:
+    """The B-phase execution tables: a forward plan, mirrored.
+
+    The backward pipeline is the forward one reflected through the ring:
+    B unit ``(p, m)`` runs on the same device as F unit ``(p, m)`` and
+    depends on ``(p+1, m)`` one *reverse*-ring hop away, so relabelling
+    positions ``r = P-1-p`` and devices ``d -> D-1-d`` turns the B-unit
+    dependency graph into exactly the forward one.  We therefore reuse
+    :func:`build_plan` and flip its device columns, reinterpreting the
+    tables for the executor's backward scan:
+
+    * ``microbatch[t, d]`` / ``group[t, d]`` — the B unit ``(group*D+d,
+      m)`` device d transposes at tick t (cotangent in, cotangent +
+      weight-grad contribution out);
+    * ``read_slot`` — the in-flight *cotangent* slot consumed (-1 at
+      the last position, whose seed ``d_out[m]`` arrives by carousel);
+    * ``recv_slot`` — where the cotangent arriving on the ring from
+      device ``(d+1) % D`` is parked (the mirror of the forward hop:
+      sends travel the reverse ring);
+    * ``collect`` — marks entry units ``(0, m)`` on device 0, whose
+      produced cotangent is the source-item gradient ``d_items[m]``;
+    * feed columns — the ``d_out`` seed carousel.  Seeds are sharded
+      with the *flipped* round-robin layout (device d holds items
+      ``j*D + (D-1-d)``) and circulate on the forward ring so seed m
+      reaches device D-1 at its m-th consumption.
+
+    The unit ordering equals the B-unit subsequence of
+    :func:`build_combined_plan` (each position's units run in
+    microbatch order in both); the combined table is the schedule
+    artifact, this is what the custom-VJP bwd phase executes.
+    """
+    fwd = build_plan(name, num_stages, num_microbatches, interleave, handoff)
+    flip = lambda a: np.ascontiguousarray(a[:, ::-1])
+    return dataclasses.replace(
+        fwd,
+        microbatch=flip(fwd.microbatch),
+        group=flip((fwd.interleave - 1) - fwd.group),
+        read_slot=flip(fwd.read_slot),
+        recv_slot=flip(fwd.recv_slot),
+        collect=flip(fwd.collect),
+        inject_devices=(num_stages - 1,),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class CombinedPlan:
+    """One tick table scheduling forward *and* backward units.
+
+    This is the schedule artifact of training under a hand-written
+    (planned) backward: every device runs at most one unit per tick, a
+    unit is ``(kind, position, microbatch)`` with kind ``UNIT_F`` /
+    ``UNIT_B`` / ``UNIT_W``, and the stash/release columns (see the
+    column contract in the module docstring) prove the peak number of
+    concurrently live activation stashes from the table itself —
+    ``min(S, M)`` per device for ``one_f_one_b`` (the 1F1B memory
+    bound, now a plan property instead of a modeling assumption) vs
+    ``M`` for gpipe's fill-then-drain.
+
+    Execution: :class:`repro.core.stream.FutureEvaluator` with
+    ``backward="planned"`` realizes the combined plan under XLA's
+    two-phase autodiff protocol — ``jax.custom_vjp`` runs all F units
+    (the ``forward`` plan, identical tables to :func:`build_plan`)
+    before any B unit (the ``backward`` plan, same unit order as this
+    table's B subsequence).  At that phase boundary all ``V*M`` stashes
+    are live regardless of schedule, so the executed stash buffers are
+    indexed ``group * M + m``; the interleaved stash/release coloring
+    here is what a fused runtime (loss computed in-pipeline, B units
+    issued as seeds arrive — the ZB executor follow-on) realizes, and
+    is what :func:`repro.core.chunking.schedule_peak_items` scores
+    under ``backward="planned"``.
+
+    Attributes (all ``(num_ticks, num_stages)`` unless noted):
+      kind: unit kind at (tick, device); -1 = idle.
+      microbatch: the unit's item; -1 = idle.
+      position: the unit's global virtual stage in ``[0, D*V)``.
+      stash_slot: per-device stash color written by an F unit; -1 else.
+      release_slot: stash color freed after this unit (the B unit, or
+        the W unit when ``split_backward``); -1 else.
+      num_stash_slots: interval-coloring count == peak live stashes.
+      forward / backward: the two phase-execution table sets.
+    """
+
+    name: str
+    num_stages: int
+    num_microbatches: int
+    interleave: int
+    handoff: int
+    split_backward: bool
+    num_ticks: int
+    kind: np.ndarray
+    microbatch: np.ndarray
+    position: np.ndarray
+    stash_slot: np.ndarray
+    release_slot: np.ndarray
+    num_stash_slots: int
+    forward: SchedulePlan
+    backward: SchedulePlan
+
+    @property
+    def peak_stash_items(self) -> int:
+        """Peak concurrently-stashed activations (in items), recomputed
+        from the stash/release columns: a stash is live from its F tick
+        through its releasing unit's tick inclusive."""
+        peak = 0
+        for dev in range(self.num_stages):
+            live = 0
+            for t in range(self.num_ticks):
+                if self.stash_slot[t, dev] >= 0:
+                    live += 1
+                peak = max(peak, live)
+                if self.release_slot[t, dev] >= 0:
+                    live -= 1
+        return peak
+
+    @property
+    def bubble_fraction(self) -> float:
+        """Idle fraction of the combined (ticks x devices) grid."""
+        busy = int((self.kind >= 0).sum())
+        return 1.0 - busy / (self.num_ticks * self.num_stages)
+
+
+def build_combined_plan(
+    name: str,
+    num_stages: int,
+    num_microbatches: int,
+    interleave: int = 1,
+    handoff: int = DEFAULT_HANDOFF,
+    split_backward: bool = False,
+) -> CombinedPlan:
+    """Greedy list-schedule of F, B (and optionally W) units jointly.
+
+    Dependencies: ``F(p, m)`` is consumable ``handoff`` ticks after
+    ``F(p-1, m)``; ``B(P-1, m)`` one tick after ``F(P-1, m)`` (the
+    local loss turnaround — no ring hop); ``B(p, m)`` ``handoff`` ticks
+    after ``B(p+1, m)``; ``W(p, m)`` one tick after ``B(p, m)`` (same
+    device, any later tick — the ZB-H1 bubble filler).
+
+    Schedule semantics:
+
+    * ``gpipe`` — phase-gated: no B unit starts until every F unit has
+      run (fill then drain), so every device's stash peaks at its full
+      ``V*M`` unit inputs.
+    * ``one_f_one_b`` / ``interleaved`` — B units take priority over F
+      the moment their cotangent is available, and a device may not
+      start a new F unit while ``V * min(S, M)`` stashes are live (the
+      1F1B in-flight cap).  The steady state is the classic 1F1B
+      alternation and the stash bound is realized *by construction* —
+      asserted from the plan columns in the tier-1 tests, not modeled.
+
+    ``split_backward=True`` emits the 3-way unit split: B units carry
+    only the activation grad, W units the weight grad, and the stash is
+    released at W (both consume it).  The executor does not run split
+    plans yet (ZB-H1 is a follow-on plan *consumer*, not a new
+    builder); the tables are the groundwork.
+    """
+    import heapq
+
+    _validate(name, num_stages, num_microbatches, interleave)
+    d_, m_, v_ = num_stages, num_microbatches, interleave
+    num_positions = d_ * v_
+    p_last = num_positions - 1
+    kinds = (UNIT_F, UNIT_B, UNIT_W) if split_backward else (UNIT_F, UNIT_B)
+    # 1F1B live-stash cap: min(S, M) items per (device, local group) —
+    # per-group rather than per-device so a shallow group saturating its
+    # stash can never starve the deeper groups its own drain depends on
+    # (a flat per-device cap deadlocks interleaved plans).  Per-device
+    # total: V * min(S, M).
+    cap = min(d_, m_)
+    gpipe_gated = name == "gpipe"
+    release_kind = UNIT_W if split_backward else UNIT_B
+
+    def dev_of(p):
+        return p % d_
+
+    def priority(unit):
+        kind, p, m = unit
+        # B drains stashes first; F fills; W mops up bubbles.  Within a
+        # kind, lowest microbatch first, F deepest-position first (the
+        # forward builder's microbatch-major key), B shallowest first.
+        rank = {UNIT_B: 0, UNIT_F: 1, UNIT_W: 2}[kind]
+        return (rank, m, -p if kind == UNIT_F else p)
+
+    finish: dict[tuple[int, int, int], int] = {}
+    ready: list[list] = [[] for _ in range(d_)]
+    becomes_ready: dict[int, list[tuple[int, int, int]]] = {}
+    deferred_b: list[tuple[int, int, int]] = []  # gpipe phase gate
+    for m in range(m_):
+        heapq.heappush(ready[0], (priority((UNIT_F, 0, m)), (UNIT_F, 0, m)))
+    live = [[0] * v_ for _ in range(d_)]
+    remaining = num_positions * m_ * len(kinds)
+    remaining_f = num_positions * m_
+    work: list[list[tuple[int, int, int] | None]] = []
+    t = 0
+    limit = (len(kinds) * (m_ + handoff) * (num_positions + 1) + 8) * (
+        2 + 2 * handoff
+    )
+    while remaining:
+        for unit in becomes_ready.pop(t, ()):
+            if gpipe_gated and unit[0] != UNIT_F and remaining_f:
+                deferred_b.append(unit)
+            else:
+                heapq.heappush(ready[dev_of(unit[1])], (priority(unit), unit))
+        row: list[tuple[int, int, int] | None] = [None] * d_
+        for dev in range(d_):
+            skipped = []
+            unit = None
+            while ready[dev]:
+                cand = heapq.heappop(ready[dev])
+                if (
+                    cand[1][0] == UNIT_F
+                    and not gpipe_gated
+                    and live[dev][cand[1][1] // d_] >= cap
+                ):
+                    skipped.append(cand)
+                    continue
+                unit = cand[1]
+                break
+            for c in skipped:
+                heapq.heappush(ready[dev], c)
+            row[dev] = unit
+        for dev, unit in enumerate(row):
+            if unit is None:
+                continue
+            kind, p, m = unit
+            finish[unit] = t
+            remaining -= 1
+            if kind == UNIT_F:
+                remaining_f -= 1
+                live[dev][p // d_] += 1
+                if p < p_last:
+                    becomes_ready.setdefault(t + handoff, []).append(
+                        (UNIT_F, p + 1, m)
+                    )
+                else:
+                    becomes_ready.setdefault(t + 1, []).append((UNIT_B, p, m))
+            elif kind == UNIT_B:
+                if p > 0:
+                    becomes_ready.setdefault(t + handoff, []).append(
+                        (UNIT_B, p - 1, m)
+                    )
+                if split_backward:
+                    becomes_ready.setdefault(t + 1, []).append((UNIT_W, p, m))
+                else:
+                    live[dev][p // d_] -= 1
+            else:  # UNIT_W
+                live[dev][p // d_] -= 1
+        if gpipe_gated and remaining_f == 0 and deferred_b:
+            for unit in deferred_b:
+                becomes_ready.setdefault(t + 1, []).append(unit)
+            deferred_b = []
+        work.append(row)
+        t += 1
+        if t > limit:  # pragma: no cover
+            raise RuntimeError(f"combined schedule {name} did not converge")
+
+    num_ticks = len(work)
+    kind_tab = np.full((num_ticks, d_), -1, np.int32)
+    microbatch = np.full((num_ticks, d_), -1, np.int32)
+    position = np.zeros((num_ticks, d_), np.int32)
+    for tt, row in enumerate(work):
+        for dev, unit in enumerate(row):
+            if unit is None:
+                continue
+            k, p, m = unit
+            kind_tab[tt, dev] = k
+            microbatch[tt, dev] = m
+            position[tt, dev] = p
+
+    # Stash coloring: the activation stashed by F(p, m) on dev(p) is
+    # live through the tick its releasing unit (B, or W when split)
+    # consumes it.  Same smallest-free interval allocation as the
+    # hand-off slots, so the color count is exactly the peak.
+    stash_slot = np.full((num_ticks, d_), -1, np.int32)
+    release_slot = np.full((num_ticks, d_), -1, np.int32)
+    free: list[list[int]] = [[] for _ in range(d_)]
+    next_slot = [0] * d_
+    freed: dict[tuple[int, int], list[int]] = {}
+    slot_of: dict[tuple[int, int], int] = {}
+    for tt, row in enumerate(work):
+        for dev in range(d_):
+            for slot in freed.pop((tt, dev), []):
+                free[dev].append(slot)
+        for dev, unit in enumerate(row):
+            if unit is None:
+                continue
+            k, p, m = unit
+            if k == UNIT_F:
+                if free[dev]:
+                    slot = min(free[dev])
+                    free[dev].remove(slot)
+                else:
+                    slot = next_slot[dev]
+                    next_slot[dev] += 1
+                stash_slot[tt, dev] = slot
+                slot_of[(p, m)] = slot
+            elif k == release_kind:
+                slot = slot_of.pop((p, m))
+                release_slot[tt, dev] = slot
+                freed.setdefault((tt + 1, dev), []).append(slot)
+
+    return CombinedPlan(
+        name=name,
+        num_stages=d_,
+        num_microbatches=m_,
+        interleave=v_,
+        handoff=handoff,
+        split_backward=split_backward,
+        num_ticks=num_ticks,
+        kind=kind_tab,
+        microbatch=microbatch,
+        position=position,
+        stash_slot=stash_slot,
+        release_slot=release_slot,
+        num_stash_slots=max(next_slot) if max(next_slot) else 0,
+        forward=build_plan(name, d_, m_, v_, handoff),
+        backward=build_backward_plan(name, d_, m_, v_, handoff),
     )

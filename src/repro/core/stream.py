@@ -94,7 +94,12 @@ from repro import compat
 from repro.core import graph as G
 from repro.core.future import ppermute_future
 from repro.core.graph import Stream, StreamResult
-from repro.core.schedules import SchedulePlan, build_plan
+from repro.core.schedules import (
+    SchedulePlan,
+    build_backward_plan,
+    build_plan,
+    validate_backward,
+)
 
 PyTree = Any
 CellFn = Callable[[PyTree, PyTree], tuple[PyTree, PyTree]]
@@ -255,6 +260,31 @@ def _tree_where(pred, a, b):
     return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
 
 
+def _round_robin_feed(x, num_stages: int, n_items: int, offset: int = 0,
+                      flip: bool = False):
+    """Shard one leaf's item axis round-robin over the stage axis.
+
+    Returns ``(D, ceil(n/D), ...)``: device ``d``'s local feed shard.
+    ``offset`` rotates the layout so item ``m`` reaches the injection
+    device after ``m`` reverse-ring advances (the forward carousels);
+    ``flip`` mirrors it instead — device ``d`` holds items
+    ``j*D + (D-1-d)`` and the carousel advances on the *forward* ring,
+    so item ``m`` reaches device ``D-1`` at its m-th consumption (the
+    planned backward's cotangent-seed carousel).
+    """
+    d_ = num_stages
+    feed_len = math.ceil(n_items / d_)
+    pad = feed_len * d_ - n_items
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
+    x = x.reshape((feed_len, d_) + x.shape[1:])
+    if flip:
+        x = x[:, ::-1]
+    elif offset:
+        x = jnp.roll(x, offset, axis=1)
+    return jnp.swapaxes(x, 0, 1)
+
+
 class FutureEvaluator:
     """Pipelined evaluation across ``axis_name`` of ``mesh``.
 
@@ -286,10 +316,22 @@ class FutureEvaluator:
       stage-sharded and the caller slices the final stage's block — no
       collective touches the outs.
 
-    The schedule is data-oblivious, so ``jax.grad`` through it yields the
-    reversed (backward) pipeline automatically — GPipe by autodiff (1F1B
-    and interleaved inherit the same property; see schedules.py for what
-    ``one_f_one_b`` does and does not change forward-only).
+    The plan tables follow the tick-plan column contract documented in
+    :mod:`repro.core.schedules` (the single normative description of
+    microbatch/group/slot/feed/stash columns).
+
+    Training backward, pluggable (``backward=``):
+
+    * ``"autodiff"`` (default) — the schedule is data-oblivious, so
+      ``jax.grad`` through it yields the reversed (backward) pipeline
+      automatically: GPipe by autodiff.  Every schedule then stashes
+      all ``V*M`` unit inputs per device.
+    * ``"planned"`` — the backward is itself a scheduled computation:
+      a ``jax.custom_vjp`` runs the combined plan's B units over the
+      same one-hop ring in the reverse direction
+      (:meth:`_run_chain_planned`), making ``one_f_one_b`` a real
+      F/B-interleaved schedule at the plan level rather than a memory
+      model.  Gradients are bitwise-equal to the autodiff path.
     """
 
     name = "future"
@@ -300,6 +342,7 @@ class FutureEvaluator:
         axis_name: str,
         schedule: str = "gpipe",
         interleave: int = 1,
+        backward: str = "autodiff",
     ):
         self.mesh = mesh
         self.axis_name = axis_name
@@ -307,6 +350,7 @@ class FutureEvaluator:
         self.interleave = interleave if schedule == "interleaved" else 1
         if schedule != "interleaved" and interleave != 1:
             raise ValueError(f"{schedule=} requires interleave=1, got {interleave}")
+        self.backward = validate_backward(backward)
         # Partial-manual shard_map: only the pipeline axis is manual; any
         # other mesh axes (data/model) keep automatic GSPMD partitioning,
         # so stages can themselves be FSDP×TP sharded (production mode).
@@ -342,6 +386,8 @@ class FutureEvaluator:
     # -- chain execution ---------------------------------------------------
 
     def _run_chain(self, chain: G.ChainProgram) -> tuple[tuple, PyTree]:
+        if self.backward == "planned" and chain.num_cells > 0:
+            return self._run_chain_planned(chain)
         axis = self.axis_name
         num_devices = self.mesh.shape[axis]
         num_virtual = num_devices * self.interleave
@@ -427,18 +473,6 @@ class FutureEvaluator:
         # device exactly when the carousel has advanced m times.  A
         # feedback chain's primary source holds only its `lag` init
         # items, so the feed length is per source.
-        def _to_feed(x, offset, n_items_s):
-            feed_len = math.ceil(n_items_s / d_)
-            pad = feed_len * d_ - n_items_s
-            if pad:
-                x = jnp.concatenate(
-                    [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)]
-                )
-            x = x.reshape((feed_len, d_) + x.shape[1:])
-            if offset:
-                x = jnp.roll(x, offset, axis=1)
-            return jnp.swapaxes(x, 0, 1)
-
         sources = [inj.materialize() for inj in pipelined_inj]
         src_items = [
             G.leading_axis_size(src, f"source {s} items")
@@ -446,9 +480,8 @@ class FutureEvaluator:
         ]
         feeds_fed = tuple(
             jax.tree.map(
-                lambda x, _o=plan.inject_devices[s], _n=src_items[s]: _to_feed(
-                    x, _o, _n
-                ),
+                lambda x, _o=plan.inject_devices[s], _n=src_items[s]:
+                    _round_robin_feed(x, d_, _n, offset=_o),
                 sources[s],
             )
             for s in range(n_src)
@@ -758,6 +791,525 @@ class FutureEvaluator:
             outs = G.apply_per_item(
                 lambda ab, _c=inj.combine: _c(*ab), (outs, inj.materialize())
             )
+        if chain.finalize is not None:
+            outs = G.apply_per_item(chain.finalize, outs)
+        return split_states(final_states), outs
+
+    # -- planned backward (true 1F1B custom-VJP) ---------------------------
+
+    def _run_chain_planned(self, chain: G.ChainProgram) -> tuple[tuple, PyTree]:
+        """Execute the chain with the backward pass as scheduled B units.
+
+        The combined plan (:func:`repro.core.schedules.build_combined_plan`)
+        is the schedule artifact; this method realizes it under XLA's
+        two-phase autodiff protocol with ``jax.custom_vjp``:
+
+        * **fwd** runs the plan's F units (the ordinary forward tick
+          scan) and additionally stashes every unit's input activation
+          into per-device stash buffers (slot ``group * M + m`` — the
+          phase-split coloring; see :class:`~repro.core.schedules.
+          CombinedPlan` for why the boundary forces all ``V*M`` live).
+        * **bwd** replays the plan's B units in combined-plan order
+          (:func:`~repro.core.schedules.build_backward_plan` — the
+          mirrored tables): cotangent seeds ``d_out[m]`` ride a flipped
+          feed carousel into device D-1, each B unit re-linearizes its
+          cell group at the stashed input (``jax.vjp`` — group-level
+          rematerialization, so ``remat`` is moot here) and the produced
+          input-cotangent rides :func:`~repro.core.future.
+          ppermute_future` one hop down the *reverse* ring, overlapping
+          the next unit's transpose exactly as the forward overlaps its
+          sends.  Entry units emit the source-item gradients on device 0.
+
+        Weight-gradient contributions are staged per (group, m) and
+        reduced in reverse forward-tick order (m descending per group) —
+        the order ``jax.grad`` of the forward plan accumulates in — so
+        planned gradients are *bitwise* equal to the autodiff path
+        (tested across the schedule zoo).  The staging buffer is M× the
+        stage weight-grad footprint; the ZB-H1 W-unit split (plan
+        groundwork shipped) is the path to folding it away.
+
+        Constraints (clear errors otherwise): single-source chains,
+        immutable cell state (1F1B's B-unit order ``m = 0..M-1`` is
+        only sound when cells never mutate state across items — a
+        mutable chain's transpose needs ``m`` *descending*), floating
+        point items, no feedback.
+        """
+        axis = self.axis_name
+        d_ = self.mesh.shape[axis]
+        v_ = self.interleave
+        num_virtual = d_ * v_
+        m_ = chain.num_items
+
+        if chain.feedback is not None:
+            raise ValueError(
+                "backward='planned' does not support feedback chains "
+                "(decode loops do not train); use backward='autodiff'"
+            )
+        if len(chain.injections) != 1:
+            raise ValueError(
+                "backward='planned' supports single-source chains only "
+                "(the training shape: one stream of microbatches); use "
+                "backward='autodiff' for zip/multi-source programs"
+            )
+        if chain.num_cells % num_virtual != 0:
+            raise ValueError(
+                f"num_cells={chain.num_cells} not divisible by axis "
+                f"'{axis}' size {d_} x interleave {v_}"
+            )
+        cells_per_group = chain.num_cells // num_virtual
+
+        cell_fn, init_state, mutable, split_states = G._chain_cell_machinery(
+            chain
+        )
+        if mutable:
+            raise ValueError(
+                "backward='planned' requires immutable cell state "
+                "(mutable_state=False): the 1F1B backward runs items in "
+                "ascending order, which is only a valid transpose when "
+                "cells do not mutate state across items; use "
+                "backward='autodiff'"
+            )
+
+        src = chain.injections[0].materialize()
+        for leaf in jax.tree.leaves(src):
+            if not jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.inexact):
+                raise ValueError(
+                    "backward='planned' requires floating-point source "
+                    "items (cotangents ride the same ring buffers)"
+                )
+        G.leading_axis_size(src, "items")
+
+        # Differentiate only the inexact state leaves: the unified
+        # multi-segment machinery threads integer bookkeeping (cell /
+        # segment indices) through the state, whose cotangents are
+        # symbolic float0 — they never ride the ring.
+        state_leaves, state_def = jax.tree.flatten(init_state)
+        diff_ids = tuple(
+            i
+            for i, leaf in enumerate(state_leaves)
+            if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.inexact)
+        )
+
+        plan = self.plan_for(m_)
+        bplan = build_backward_plan(
+            self.schedule, d_, m_, v_, plan.handoff
+        )
+        k_, kb_ = plan.num_slots, bplan.num_slots
+        n_stash = v_ * m_
+
+        perm = np.concatenate(
+            [
+                np.arange(cells_per_group) + (v * d_ + d) * cells_per_group
+                for d in range(d_)
+                for v in range(v_)
+            ]
+        )
+        inv_perm = np.argsort(perm)
+
+        item_struct = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), src
+        )
+        spec_shard = lambda tree: jax.tree.map(
+            lambda _: jax.sharding.PartitionSpec(axis), tree
+        )
+        fwd_ring = [(i, (i + 1) % d_) for i in range(d_)]
+        rev_ring = [(i, (i - 1) % d_) for i in range(d_)]
+
+        def _plan_xs(p: SchedulePlan):
+            return {
+                "mb": jnp.asarray(p.microbatch),
+                "grp": jnp.asarray(p.group),
+                "rslot": jnp.asarray(p.read_slot),
+                "cslot": jnp.asarray(p.recv_slot),
+                "coll": jnp.asarray(p.collect),
+                "reload": jnp.asarray(p.feed_reload),
+                "idx": jnp.asarray(p.feed_idx),
+                "adv": jnp.asarray(p.feed_advance),
+            }
+
+        xs_f, xs_b = _plan_xs(plan), _plan_xs(bplan)
+
+        def _varying(x):
+            return compat.pcast(x, (axis,), to="varying")
+
+        def _zeros(shape_prefix, struct):
+            return jax.tree.map(
+                lambda s: _varying(jnp.zeros(shape_prefix + s.shape, s.dtype)),
+                struct,
+            )
+
+        def _row_update(buf, row, idx, write):
+            """Masked row write that XLA can do in place (see the outs
+            write in the forward engine)."""
+            return jax.tree.map(
+                lambda b, v: lax.dynamic_update_index_in_dim(
+                    b,
+                    jnp.where(
+                        write,
+                        v,
+                        lax.dynamic_index_in_dim(b, idx, keepdims=False),
+                    ),
+                    idx,
+                    0,
+                ),
+                buf,
+                row,
+            )
+
+        def group_apply(states_g, flowing):
+            # Same per-cell primitive sequence as the forward engine's
+            # group_scan (bit-equality of outputs and of their vjp).
+            def cell(fl, st):
+                _st, out = cell_fn(st, fl)
+                return out, None
+
+            out, _ = lax.scan(cell, flowing, states_g)
+            return out
+
+        def _state_groups(local_states):
+            # (V, cells_per_group, ...) local view; V == 1 is group 0.
+            return jax.tree.map(
+                lambda x: x.reshape((v_, cells_per_group) + x.shape[1:]),
+                local_states,
+            )
+
+        # -- fwd phase: the forward plan's F units (+ activation stash) ----
+        def _make_forward(with_stash: bool):
+            """The forward tick scan.  The stash buffer (the planned
+            backward's residuals) threads through the scan carry only
+            when a VJP will consume it: the primal-only path (forward
+            evaluation without jax.grad) must not pay a per-tick
+            whole-buffer stash write — the same masked-carry copy cost
+            the serving engine's cond-gating exists to avoid."""
+
+            def forward_region(stage_ids, local_states, local_feed):
+                stage = stage_ids[0]
+                local_feed = jax.tree.map(lambda x: x[0], local_feed)
+                states_v = _state_groups(local_states)
+                carry0 = (
+                    _zeros((), item_struct),      # out_prev
+                    _zeros((), jax.tree.map(
+                        lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                        local_feed,
+                    )),                            # feed register
+                    _zeros((k_,), item_struct),    # in-flight hand-offs
+                    _zeros((m_,), item_struct),    # outs
+                )
+                if with_stash:
+                    carry0 += (_zeros((n_stash,), item_struct),)
+
+                def tick(carry, x):
+                    out_prev, feed_reg, buf, outs = carry[:4]
+                    mb = jnp.take(x["mb"], stage)
+                    grp = jnp.take(x["grp"], stage)
+                    rslot = jnp.take(x["rslot"], stage)
+                    cslot = jnp.take(x["cslot"], stage)
+                    coll = jnp.take(x["coll"], stage)
+
+                    send_fut = ppermute_future(out_prev, axis, fwd_ring)
+                    fc = _tree_where(
+                        x["reload"] > 0,
+                        jax.tree.map(
+                            lambda it: lax.dynamic_index_in_dim(
+                                it, x["idx"], keepdims=False
+                            ),
+                            local_feed,
+                        ),
+                        feed_reg,
+                    )
+                    feed_fut = ppermute_future(fc, axis, rev_ring)
+
+                    slot_val = jax.tree.map(
+                        lambda b: lax.dynamic_index_in_dim(
+                            b, jnp.clip(rslot, 0, k_ - 1), keepdims=False
+                        ),
+                        buf,
+                    )
+                    inp = _tree_where(rslot < 0, fc, slot_val)
+                    states_g = jax.tree.map(
+                        lambda s: lax.dynamic_index_in_dim(
+                            s, grp, keepdims=False
+                        ),
+                        states_v,
+                    )
+                    out = group_apply(states_g, inp)
+
+                    valid = mb >= 0
+                    outs = _row_update(
+                        outs, out, jnp.clip(mb, 0, m_ - 1), valid & (coll > 0)
+                    )
+                    if with_stash:
+                        sslot = jnp.clip(grp * m_ + mb, 0, n_stash - 1)
+                        stash = _row_update(carry[4], inp, sslot, valid)
+
+                    arrived = send_fut.force(anchor=out)
+                    buf = _row_update(
+                        buf, arrived, jnp.clip(cslot, 0, k_ - 1), cslot >= 0
+                    )
+                    feed_reg = _tree_where(
+                        x["adv"] > 0, feed_fut.force(anchor=out), fc
+                    )
+                    carry_out = (out, feed_reg, buf, outs)
+                    if with_stash:
+                        carry_out += (stash,)
+                    return carry_out, None
+
+                final, _ = lax.scan(tick, carry0, xs_f)
+                outs = final[3]
+                if with_stash:
+                    return outs, final[4]
+                return outs
+
+            out_specs = (
+                (spec_shard(item_struct), spec_shard(item_struct))
+                if with_stash
+                else spec_shard(item_struct)
+            )
+            region = compat.shard_map(
+                forward_region,
+                mesh=self.mesh,
+                in_specs=(
+                    jax.sharding.PartitionSpec(axis),
+                    spec_shard(init_state),
+                    spec_shard(item_struct),
+                ),
+                out_specs=out_specs,
+                axis_names={axis},
+            )
+
+            def forward(state0, src_items):
+                state_p = (
+                    jax.tree.map(lambda x: x[perm], state0)
+                    if v_ > 1
+                    else state0
+                )
+                feed = jax.tree.map(
+                    lambda x: _round_robin_feed(x, d_, m_), src_items
+                )
+                res = region(jnp.arange(d_, dtype=jnp.int32), state_p, feed)
+                outs, stash = res if with_stash else (res, None)
+                outs = jax.tree.map(
+                    lambda o: lax.slice_in_dim(
+                        o, (d_ - 1) * m_, d_ * m_, axis=0
+                    ),
+                    outs,
+                )
+                return outs, stash
+
+            return forward
+
+        _forward_primal = _make_forward(False)
+        _forward = _make_forward(True)
+
+        # -- bwd phase: the combined plan's B units over the reverse ring --
+        def backward_region(stage_ids, local_states, local_stash,
+                            local_dfeed, local_dfinal_diff):
+            stage = stage_ids[0]
+            local_dfeed = jax.tree.map(lambda x: x[0], local_dfeed)
+            states_v = _state_groups(local_states)
+            states_v_leaves = jax.tree.leaves(states_v)
+            group_diff_struct = tuple(
+                jax.ShapeDtypeStruct(
+                    states_v_leaves[i].shape[1:], states_v_leaves[i].dtype
+                )
+                for i in diff_ids
+            )
+            zero_item = _zeros((), item_struct)
+            carry0 = (
+                zero_item,                          # cotangent being sent
+                _zeros((), jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                    local_dfeed,
+                )),                                  # d_out seed register
+                _zeros((kb_,), item_struct),         # in-flight cotangents
+                _zeros((n_stash,), group_diff_struct),  # staged dW (grp, m)
+                _zeros((m_,), item_struct),          # d_items (device 0)
+            )
+
+            def tick(carry, x):
+                dflow_prev, dfeed_reg, dbuf, staging, ditems = carry
+                mb = jnp.take(x["mb"], stage)
+                grp = jnp.take(x["grp"], stage)
+                rslot = jnp.take(x["rslot"], stage)
+                cslot = jnp.take(x["cslot"], stage)
+                coll = jnp.take(x["coll"], stage)
+
+                send_fut = ppermute_future(dflow_prev, axis, rev_ring)
+                fc = _tree_where(
+                    x["reload"] > 0,
+                    jax.tree.map(
+                        lambda it: lax.dynamic_index_in_dim(
+                            it, x["idx"], keepdims=False
+                        ),
+                        local_dfeed,
+                    ),
+                    dfeed_reg,
+                )
+                feed_fut = ppermute_future(fc, axis, fwd_ring)
+
+                slot_val = jax.tree.map(
+                    lambda b: lax.dynamic_index_in_dim(
+                        b, jnp.clip(rslot, 0, kb_ - 1), keepdims=False
+                    ),
+                    dbuf,
+                )
+                g = _tree_where(rslot < 0, fc, slot_val)
+                valid = mb >= 0
+                sslot = jnp.clip(grp * m_ + mb, 0, n_stash - 1)
+                xin = jax.tree.map(
+                    lambda s: lax.dynamic_index_in_dim(
+                        s, sslot, keepdims=False
+                    ),
+                    local_stash,
+                )
+                states_g = jax.tree.map(
+                    lambda s: lax.dynamic_index_in_dim(s, grp, keepdims=False),
+                    states_v,
+                )
+                sg_leaves = jax.tree.leaves(states_g)
+                sg_def = jax.tree.structure(states_g)
+                diff_vals = tuple(sg_leaves[i] for i in diff_ids)
+
+                def apply_diff(diff_vals_, x_):
+                    full = list(sg_leaves)
+                    for i, val in zip(diff_ids, diff_vals_):
+                        full[i] = val
+                    return group_apply(jax.tree.unflatten(sg_def, full), x_)
+
+                def unit(args):
+                    dv_, x_, g_ = args
+                    _out, vjp_fn = jax.vjp(apply_diff, dv_, x_)
+                    return vjp_fn(g_)
+
+                def idle(args):
+                    dv_, x_, _g = args
+                    return (
+                        tuple(jnp.zeros_like(v) for v in dv_),
+                        jax.tree.map(jnp.zeros_like, x_),
+                    )
+
+                dsg, dx = lax.cond(valid, unit, idle, (diff_vals, xin, g))
+                staging = _row_update(staging, dsg, sslot, valid)
+                ditems = _row_update(
+                    ditems, dx, jnp.clip(mb, 0, m_ - 1), valid & (coll > 0)
+                )
+
+                arrived = send_fut.force(anchor=dx)
+                dbuf = _row_update(
+                    dbuf, arrived, jnp.clip(cslot, 0, kb_ - 1), cslot >= 0
+                )
+                dfeed_reg = _tree_where(
+                    x["adv"] > 0, feed_fut.force(anchor=dx), fc
+                )
+                return (dx, dfeed_reg, dbuf, staging, ditems), None
+
+            (_, _, _, staging, ditems), _ = lax.scan(tick, carry0, xs_b)
+
+            # Weight-grad reduction in the order jax.grad of the forward
+            # plan accumulates: per group, microbatch M-1 down to 0,
+            # seeded with the final-states cotangent (bitwise parity).
+            staging_v = jax.tree.map(
+                lambda s: s.reshape((v_, m_) + s.shape[1:]), staging
+            )
+            dfinal_v = tuple(
+                x.reshape((v_, cells_per_group) + x.shape[1:])
+                for x in local_dfinal_diff
+            )
+
+            def reduce_step(acc, i):
+                acc = jax.tree.map(
+                    lambda a, s: a
+                    + lax.dynamic_index_in_dim(
+                        s, m_ - 1 - i, axis=1, keepdims=False
+                    ),
+                    acc,
+                    staging_v,
+                )
+                return acc, None
+
+            dstates_v, _ = lax.scan(
+                reduce_step, dfinal_v, jnp.arange(m_, dtype=jnp.int32)
+            )
+            dstates_diff = jax.tree.map(
+                lambda x: x.reshape((v_ * cells_per_group,) + x.shape[2:]),
+                dstates_v,
+            )
+            return dstates_diff, ditems
+
+        diff_struct = tuple(
+            jax.ShapeDtypeStruct(state_leaves[i].shape, state_leaves[i].dtype)
+            for i in diff_ids
+        )
+        backward_region = compat.shard_map(
+            backward_region,
+            mesh=self.mesh,
+            in_specs=(
+                jax.sharding.PartitionSpec(axis),
+                spec_shard(init_state),
+                spec_shard(item_struct),
+                spec_shard(item_struct),
+                spec_shard(diff_struct),
+            ),
+            out_specs=(spec_shard(diff_struct), spec_shard(item_struct)),
+            axis_names={axis},
+        )
+
+        def _backward(state0, stash, d_final_diff, d_outs):
+            state_p = (
+                jax.tree.map(lambda x: x[perm], state0) if v_ > 1 else state0
+            )
+            dfinal_p = (
+                tuple(x[perm] for x in d_final_diff)
+                if v_ > 1
+                else tuple(d_final_diff)
+            )
+            dfeed = jax.tree.map(
+                lambda x: _round_robin_feed(x, d_, m_, flip=True), d_outs
+            )
+            dstates_diff, ditems = backward_region(
+                jnp.arange(d_, dtype=jnp.int32), state_p, stash, dfeed,
+                dfinal_p,
+            )
+            if v_ > 1:
+                dstates_diff = tuple(x[inv_perm] for x in dstates_diff)
+            ditems = jax.tree.map(
+                lambda o: lax.slice_in_dim(o, 0, m_, axis=0), ditems
+            )
+            # Reassemble the full state cotangent: integer bookkeeping
+            # leaves get symbolic float0 zeros (the custom_vjp contract).
+            out_leaves: list = []
+            it = iter(dstates_diff)
+            for i, leaf in enumerate(state_leaves):
+                if i in diff_ids:
+                    out_leaves.append(next(it))
+                else:
+                    out_leaves.append(
+                        np.zeros(np.shape(leaf), jax.dtypes.float0)
+                    )
+            return jax.tree.unflatten(state_def, out_leaves), ditems
+
+        @jax.custom_vjp
+        def run(state0, src_items):
+            # Primal-only (no differentiation): the stash-free forward.
+            outs, _ = _forward_primal(state0, src_items)
+            return state0, outs
+
+        def run_fwd(state0, src_items):
+            outs, stash = _forward(state0, src_items)
+            return (state0, outs), (state0, stash)
+
+        def run_bwd(res, cot):
+            state0, stash = res
+            d_final, d_outs = cot
+            d_final_diff = tuple(
+                leaf
+                for i, leaf in enumerate(jax.tree.leaves(d_final))
+                if i in diff_ids
+            )
+            return _backward(state0, stash, d_final_diff, d_outs)
+
+        run.defvjp(run_fwd, run_bwd)
+        final_states, outs = run(init_state, src)
         if chain.finalize is not None:
             outs = G.apply_per_item(chain.finalize, outs)
         return split_states(final_states), outs

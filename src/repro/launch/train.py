@@ -45,6 +45,8 @@ def build(args):
         num_microbatches=args.microbatches,
         attn_impl=args.attn_impl,
         remat=True,
+        pipeline_schedule=args.pipeline_schedule,
+        pipeline_backward=args.pipeline_backward,
     )
     ocfg = AdamWConfig(
         learning_rate=args.lr, warmup_steps=args.warmup,
@@ -67,6 +69,14 @@ def main(argv=None):
     ap.add_argument("--warmup", type=int, default=20)
     ap.add_argument("--attn-impl", default="dense",
                     choices=["dense", "chunked", "pallas"])
+    ap.add_argument("--pipeline-schedule", default="gpipe",
+                    choices=["gpipe", "one_f_one_b", "interleaved"],
+                    help="layer-pipeline tick schedule (multi-pod mode)")
+    ap.add_argument("--pipeline-backward", default="autodiff",
+                    choices=["autodiff", "planned"],
+                    help="backward execution: jax.grad transpose of the "
+                         "forward plan, or the combined plan's B units "
+                         "through the custom-VJP engine (true 1F1B)")
     ap.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--checkpoint-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
@@ -78,6 +88,20 @@ def main(argv=None):
     layout = T.model_layout(cfg)
     print(f"arch={cfg.name} params={param_count(layout)/1e6:.1f}M "
           f"devices={jax.device_count()}")
+    if tcfg.num_microbatches > 1:
+        # Surface the schedule's memory bound (4-stage reference split —
+        # this CPU driver itself runs unpipelined; the multi-pod driver
+        # is launch.pipeline_demo): the combined plan's stash bound vs
+        # what autodiff keeps live.  Plan-level: the bound a fused
+        # executor realizes; the two-phase custom-VJP realization holds
+        # V*M at the autodiff phase boundary (see CombinedPlan).
+        pcfg = tcfg.pipeline_config(num_stages=4)
+        auto = dataclasses.replace(pcfg, backward="autodiff").peak_stash_items
+        print(f"pipeline: schedule={tcfg.pipeline_schedule} "
+              f"backward={tcfg.pipeline_backward} -> combined-plan stash "
+              f"bound {pcfg.peak_stash_items}/{tcfg.num_microbatches} "
+              f"microbatches per device at a 4-stage split (autodiff "
+              f"keeps {auto}/{tcfg.num_microbatches} live)")
 
     rng = jax.random.PRNGKey(args.seed)
     params = init_params(rng, layout)

@@ -69,6 +69,7 @@ def choose_elastic_plan(
     per_tick_overhead: float = 1e-4,
     memory_budget_items: float | None = None,
     num_sources: int = 1,
+    backward: str = "autodiff",
 ) -> ElasticPlan:
     """Mesh factorization *and* schedule re-plan for the new device count.
 
@@ -80,7 +81,15 @@ def choose_elastic_plan(
     optimum genuinely moves (e.g. a deep pipeline's interleaved schedule
     degrades to plain fill/drain when the axis halves), so re-deriving
     only the mesh silently runs the wrong schedule.  ``num_sources``
-    forwards multi-injection feed costs into the memory budget.
+    forwards multi-injection feed costs into the memory budget;
+    ``backward`` scores the stash for the job's backward mode and
+    defaults to ``"autodiff"`` — matching ``TrainConfig``'s default —
+    because a job training with the autodiff backward cannot buy memory
+    with 1F1B, and the budget check must not pretend it can.  Pass
+    ``backward="planned"`` (with ``pipeline_backward="planned"``) to
+    let the re-plan use the combined plans' schedule-level stash
+    bounds (see :class:`repro.core.schedules.CombinedPlan` for what
+    the two-phase realization holds at the autodiff phase boundary).
     """
     pipe = 1
     while pipe * 2 <= preferred_pipeline and num_devices % (pipe * 2) == 0:
@@ -105,6 +114,7 @@ def choose_elastic_plan(
         memory_budget_items=memory_budget_items,
         num_sources=num_sources,
         chunks_divide=global_batch,
+        backward=backward,
     )
     return ElasticPlan(
         base.mesh_shape + (pipe,),

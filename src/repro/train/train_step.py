@@ -45,6 +45,11 @@ class TrainConfig:
     # many non-contiguous stage groups each device owns.
     pipeline_schedule: str = "gpipe"
     pipeline_interleave: int = 1
+    # Backward execution: "autodiff" (jax.grad transposes the forward
+    # plan) or "planned" (the combined plan's B units run as scheduled
+    # work through a custom VJP — true 1F1B, min(S, M) stash at the
+    # plan level; gradients bitwise-equal).  See configs.base.
+    pipeline_backward: str = "autodiff"
 
     def pipeline_config(
         self, num_stages: int, axis_name: str = "pod"
@@ -59,6 +64,7 @@ class TrainConfig:
             remat=self.remat,
             schedule=self.pipeline_schedule,
             interleave=self.pipeline_interleave,
+            backward=self.pipeline_backward,
         )
 
 

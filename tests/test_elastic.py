@@ -82,8 +82,12 @@ class TestScheduleAwareReplanning:
         assert plan.schedule is not None
 
     def test_replan_respects_memory_budget(self):
+        # a planned-backward job: the budget may exploit the combined
+        # plans' real stash bounds (min(S, M) for 1F1B, V*min(S, M)
+        # interleaved)
         plan = choose_elastic_plan(
-            16, **{**self.KW, "memory_budget_items": 0.5}
+            16, **{**self.KW, "memory_budget_items": 0.5,
+                   "backward": "planned"}
         )
         choice = plan.schedule
         assert choice is not None
@@ -95,11 +99,22 @@ class TestScheduleAwareReplanning:
         from repro.core.chunking import schedule_peak_items
 
         peak = schedule_peak_items(
-            choice.schedule, 8, plan.num_microbatches, choice.interleave
+            choice.schedule, 8, plan.num_microbatches, choice.interleave,
+            backward="planned",
         )
         assert peak / plan.num_microbatches <= 0.5
         # gpipe's peak/M is always 1.0: the budget must have excluded it
         assert choice.schedule != "gpipe"
+
+    def test_autodiff_job_budget_is_honest(self):
+        # the default (autodiff-backward) job cannot buy memory with
+        # 1F1B: every schedule keeps all V*M unit inputs live, so a
+        # sub-1.0 budget must be reported infeasible, not silently
+        # scored against a stash bound the execution never realizes
+        with pytest.raises(ValueError, match="fits memory_budget"):
+            choose_elastic_plan(
+                16, **{**self.KW, "memory_budget_items": 0.5}
+            )
 
     @hypothesis.given(st.sampled_from([2, 4, 8, 16, 24, 48]))
     @hypothesis.settings(max_examples=10, deadline=None)

@@ -8,9 +8,13 @@ import numpy as np
 
 from repro.core import (
     Future,
+    FutureEvaluator,
     LazyEvaluator,
+    Stream,
     StreamProgram,
     bubble_fraction,
+    build_backward_plan,
+    build_combined_plan,
     build_plan,
     chunk_axis,
     defer,
@@ -25,6 +29,7 @@ from repro.core import (
     unchunk_axis,
 )
 from repro.core.future import HostFuture
+from repro.core.schedules import UNIT_B, UNIT_F, UNIT_W
 
 
 def _counting_program(num_cells):
@@ -179,9 +184,12 @@ class TestSchedulePlans:
         # overhead-dominated: plain schedules, tiny M (paper's primes case)
         choice = optimal_schedule(1e-4, 8, 1e-2, max_chunks=64)
         assert choice.interleave == 1 and choice.num_chunks == 1
-        # memory budget forces off gpipe (gpipe peak is always 1.0 items)
+        # memory budget forces off gpipe (gpipe peak is always 1.0
+        # items) — a planned-backward job, where schedules' stash
+        # bounds are real and a sub-1.0 budget is satisfiable at all
         choice = optimal_schedule(
-            1.0, 8, 1e-4, max_chunks=256, memory_budget_items=0.5
+            1.0, 8, 1e-4, max_chunks=256, memory_budget_items=0.5,
+            backward="planned",
         )
         assert choice.schedule != "gpipe"
         assert (
@@ -283,10 +291,12 @@ class TestMultiInjectionPlans:
         # same regime, but feed storage charged against the budget: more
         # sources must never *relax* the constraint
         one = optimal_schedule(
-            1.0, 8, 1e-4, max_chunks=256, memory_budget_items=0.6
+            1.0, 8, 1e-4, max_chunks=256, memory_budget_items=0.6,
+            backward="planned",
         )
         many = optimal_schedule(
-            1.0, 8, 1e-4, max_chunks=256, memory_budget_items=0.6, num_sources=4
+            1.0, 8, 1e-4, max_chunks=256, memory_budget_items=0.6,
+            num_sources=4, backward="planned",
         )
         assert many.peak_items >= one.peak_items
         assert (
@@ -296,6 +306,282 @@ class TestMultiInjectionPlans:
             / many.num_chunks
             <= 0.6
         )
+
+
+class TestCombinedPlans:
+    """Combined fwd+bwd tick plans: the backward as first-class units,
+    with the 1F1B stash bound asserted from the plan columns."""
+
+    GRID = [
+        (name, d, m, v)
+        for name in ("gpipe", "one_f_one_b")
+        for d in (1, 2, 4, 8)
+        for m in (1, 2, 4, 5, 8, 16)
+        for v in (1,)
+    ] + [
+        ("interleaved", d, m, v)
+        for d in (2, 3, 4)
+        for m in (2, 4, 5, 8)
+        for v in (2, 3)
+    ]
+
+    def test_one_f_one_b_peak_stash_is_min_s_m(self):
+        # THE acceptance assert: peak concurrently-stashed activations,
+        # computed from the stash/release columns, is min(S, M) for the
+        # 1F1B combined plan vs M for gpipe's fill-then-drain.
+        for d in (2, 4, 8):
+            for m in (1, 2, 4, 5, 8, 16):
+                cp = build_combined_plan("one_f_one_b", d, m)
+                assert cp.peak_stash_items == min(d, m), (d, m)
+                cg = build_combined_plan("gpipe", d, m)
+                assert cg.peak_stash_items == m, (d, m)
+
+    def test_peak_matches_planned_closed_form(self):
+        # the chunking model's backward="planned" term is exact against
+        # the combined plans' own columns — measured, not assumed
+        for name, d, m, v in self.GRID:
+            cp = build_combined_plan(name, d, m, v)
+            assert cp.peak_stash_items == schedule_peak_items(
+                name, d, m, v, backward="planned"
+            ), (name, d, m, v)
+            assert cp.num_stash_slots == cp.peak_stash_items
+
+    def test_autodiff_peak_is_every_unit_input(self):
+        # autodiff's fwd/bwd phase boundary keeps all V*M inputs live
+        # regardless of schedule name
+        assert schedule_peak_items("one_f_one_b", 4, 16, backward="autodiff") == 16
+        assert schedule_peak_items("gpipe", 4, 16, backward="autodiff") == 16
+        assert (
+            schedule_peak_items("interleaved", 4, 8, 2, backward="autodiff")
+            == 16
+        )
+        with pytest.raises(ValueError, match="backward"):
+            schedule_peak_items("gpipe", 4, 8, backward="zigzag")
+
+    def test_every_unit_scheduled_once_and_deps_hold(self):
+        for name, d, m, v, split in [
+            ("gpipe", 4, 8, 1, False),
+            ("one_f_one_b", 4, 8, 1, False),
+            ("one_f_one_b", 4, 5, 1, True),
+            ("interleaved", 2, 6, 2, False),
+        ]:
+            cp = build_combined_plan(name, d, m, v, split_backward=split)
+            p_ = d * v
+            tick_of = {}
+            for t in range(cp.num_ticks):
+                for dev in range(d):
+                    if cp.kind[t, dev] < 0:
+                        continue
+                    unit = (
+                        int(cp.kind[t, dev]),
+                        int(cp.position[t, dev]),
+                        int(cp.microbatch[t, dev]),
+                    )
+                    assert unit not in tick_of, unit
+                    assert cp.position[t, dev] % d == dev
+                    tick_of[unit] = t
+            kinds = (UNIT_F, UNIT_B, UNIT_W) if split else (UNIT_F, UNIT_B)
+            assert len(tick_of) == p_ * m * len(kinds)
+            h = cp.handoff
+            for mm in range(m):
+                for p in range(p_):
+                    if p > 0:
+                        assert (
+                            tick_of[(UNIT_F, p, mm)]
+                            >= tick_of[(UNIT_F, p - 1, mm)] + h
+                        )
+                    if p < p_ - 1:
+                        assert (
+                            tick_of[(UNIT_B, p, mm)]
+                            >= tick_of[(UNIT_B, p + 1, mm)] + h
+                        )
+                    if split:
+                        assert (
+                            tick_of[(UNIT_W, p, mm)] > tick_of[(UNIT_B, p, mm)]
+                        )
+                # loss turnaround: B at the last position strictly after F
+                assert (
+                    tick_of[(UNIT_B, p_ - 1, mm)] > tick_of[(UNIT_F, p_ - 1, mm)]
+                )
+
+    def test_gpipe_is_phase_gated(self):
+        cp = build_combined_plan("gpipe", 4, 8)
+        last_f = max(
+            t
+            for t in range(cp.num_ticks)
+            for dev in range(4)
+            if cp.kind[t, dev] == UNIT_F
+        )
+        first_b = min(
+            t
+            for t in range(cp.num_ticks)
+            for dev in range(4)
+            if cp.kind[t, dev] == UNIT_B
+        )
+        assert first_b > last_f
+
+    def test_one_f_one_b_interleaves(self):
+        # not phase-gated: some B unit runs before the last F unit
+        cp = build_combined_plan("one_f_one_b", 4, 8)
+        last_f = max(
+            t
+            for t in range(cp.num_ticks)
+            for dev in range(4)
+            if cp.kind[t, dev] == UNIT_F
+        )
+        first_b = min(
+            t
+            for t in range(cp.num_ticks)
+            for dev in range(4)
+            if cp.kind[t, dev] == UNIT_B
+        )
+        assert first_b < last_f
+
+    def test_stash_release_columns_pair_up(self):
+        for name in ("gpipe", "one_f_one_b"):
+            cp = build_combined_plan(name, 4, 6)
+            for dev in range(4):
+                stashes = int((cp.stash_slot[:, dev] >= 0).sum())
+                releases = int((cp.release_slot[:, dev] >= 0).sum())
+                assert stashes == releases  # every stash freed exactly once
+                assert (cp.stash_slot[:, dev].max() if stashes else -1) < (
+                    cp.num_stash_slots
+                )
+
+    def test_split_backward_groundwork(self):
+        # ZB 3-way split: W units exist, release moves to W, and the
+        # stash bound is unchanged (B still consumes before W frees)
+        cp = build_combined_plan("one_f_one_b", 4, 6, split_backward=True)
+        assert set(np.unique(cp.kind)) >= {UNIT_F, UNIT_B, UNIT_W}
+        assert cp.split_backward
+        # releases happen at W ticks only
+        for t in range(cp.num_ticks):
+            for dev in range(4):
+                if cp.release_slot[t, dev] >= 0:
+                    assert cp.kind[t, dev] == UNIT_W
+
+    def test_backward_plan_is_the_mirror(self):
+        for name, d, m, v in [
+            ("gpipe", 4, 8, 1),
+            ("one_f_one_b", 4, 5, 1),
+            ("interleaved", 2, 6, 2),
+        ]:
+            bp = build_backward_plan(name, d, m, v)
+            fp = build_plan(name, d, m, v)
+            assert bp.num_ticks == fp.num_ticks
+            # cotangent seeds feed device D-1; d_items emit on device 0
+            assert bp.inject_devices == (d - 1,)
+            assert bp.collect[:, 0].sum() == m
+            assert bp.collect[:, 1:].sum() == 0
+            # every B unit once, per-position microbatch order ascending
+            per_pos: dict = {}
+            for t in range(bp.num_ticks):
+                for dev in range(d):
+                    mb = bp.microbatch[t, dev]
+                    if mb >= 0:
+                        pos = int(bp.group[t, dev]) * d + dev
+                        per_pos.setdefault(pos, []).append(int(mb))
+            assert sorted(per_pos) == list(range(d * v))
+            for pos, seq in per_pos.items():
+                assert seq == sorted(seq) == list(range(m)), (name, pos)
+
+    def test_combined_plan_b_order_matches_backward_plan(self):
+        # the custom-VJP bwd phase (backward plan) replays the combined
+        # plan's B units: per device, identical (position, m) sequences
+        for name, d, m, v in [("one_f_one_b", 4, 6, 1), ("gpipe", 4, 6, 1)]:
+            cp = build_combined_plan(name, d, m, v)
+            bp = build_backward_plan(name, d, m, v)
+            for dev in range(d):
+                comb = [
+                    (int(cp.position[t, dev]), int(cp.microbatch[t, dev]))
+                    for t in range(cp.num_ticks)
+                    if cp.kind[t, dev] == UNIT_B
+                ]
+                mirror = [
+                    (int(bp.group[t, dev]) * d + dev, int(bp.microbatch[t, dev]))
+                    for t in range(bp.num_ticks)
+                    if bp.microbatch[t, dev] >= 0
+                ]
+                assert comb == mirror, (name, dev)
+
+    def test_optimal_schedule_flips_to_one_f_one_b_under_planned(self):
+        # satellite: the planned backward makes 1F1B's memory advantage
+        # real — a budget only its min(S, M) stash fits now selects it
+        # (V=1 search: interleaving is a separate, bubble-driven win)
+        kw = dict(
+            max_chunks=64, memory_budget_items=0.2, interleave_options=(1,)
+        )
+        choice = optimal_schedule(1.0, 4, 1e-4, backward="planned", **kw)
+        assert choice.schedule == "one_f_one_b"
+        assert choice.peak_items / choice.num_chunks <= 0.2
+        # under autodiff every schedule stashes all M: the same budget
+        # is infeasible — the old model silently pretended otherwise
+        with pytest.raises(ValueError, match="fits memory_budget"):
+            optimal_schedule(1.0, 4, 1e-4, backward="autodiff", **kw)
+
+
+class TestPlannedBackwardValidation:
+    """The planned-backward executor's contract: clear errors for the
+    shapes it cannot transpose (checked before any device work)."""
+
+    def _mesh(self):
+        from repro import compat
+
+        return compat.make_mesh(
+            (1,), ("pod",), devices=jax.devices()[:1]
+        )
+
+    def test_backward_mode_validated(self):
+        with pytest.raises(ValueError, match="backward"):
+            FutureEvaluator(self._mesh(), "pod", backward="zigzag")
+
+    def test_mutable_state_rejected(self):
+        ev = FutureEvaluator(self._mesh(), "pod", backward="planned")
+        prog = StreamProgram(lambda s, x: (s + 1, x + s), jnp.zeros(2), 2)
+        with pytest.raises(ValueError, match="immutable"):
+            evaluate(prog, jnp.ones((2, 1)), ev)
+
+    def test_feedback_rejected(self):
+        ev = FutureEvaluator(self._mesh(), "pod", backward="planned")
+        s = Stream.feedback(jnp.ones((2, 1)), 4, lambda x: x).through(
+            lambda w, x: (w, x * w), jnp.ones(2), mutable_state=False
+        )
+        with pytest.raises(ValueError, match="feedback"):
+            s.collect(ev)
+
+    def test_multi_source_rejected(self):
+        ev = FutureEvaluator(self._mesh(), "pod", backward="planned")
+        s = (
+            Stream.source(jnp.ones((2, 1)))
+            .zip(Stream.source(jnp.ones((2, 1))), lambda a, b: a + b)
+            .through(lambda w, x: (w, x * w), jnp.ones(2), mutable_state=False)
+        )
+        with pytest.raises(ValueError, match="single-source"):
+            s.collect(ev)
+
+    def test_integer_items_rejected(self):
+        ev = FutureEvaluator(self._mesh(), "pod", backward="planned")
+        prog = StreamProgram(
+            lambda w, x: (w, x * 2), jnp.ones(2), 2, mutable_state=False
+        )
+        with pytest.raises(ValueError, match="floating-point"):
+            evaluate(prog, jnp.ones((2, 1), jnp.int32), ev)
+
+    def test_pipeline_config_carries_backward(self):
+        from repro.core import PipelineConfig
+
+        cfg = PipelineConfig(
+            num_stages=4, num_microbatches=8, schedule="one_f_one_b",
+            backward="planned",
+        )
+        assert cfg.peak_stash_items == 4
+        import dataclasses
+
+        assert (
+            dataclasses.replace(cfg, backward="autodiff").peak_stash_items == 8
+        )
+        with pytest.raises(ValueError, match="backward"):
+            PipelineConfig(num_stages=4, backward="zigzag")
 
 
 class TestFutureCombinators:
