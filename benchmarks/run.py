@@ -17,8 +17,11 @@ runs a fresh paired sweep, diffs every cell against the persisted
 baselines (pipeline wall-clock, serve throughput, train wall-clock),
 and exits nonzero if any cell regressed by more than
 ``--check-tolerance`` (default 10%) — the perf gate perf-sensitive PRs
-run before merging.  ``--check`` does not overwrite the baselines;
-re-run without it to re-baseline intentionally.
+run before merging.  ``--check --suite serve`` gates only the named
+suite(s); a requested gate with no baseline exits 2 with the exact
+``--suite`` command that creates one (never a KeyError).  ``--check``
+does not overwrite the baselines; re-run without it to re-baseline
+intentionally.
 """
 from __future__ import annotations
 
@@ -219,16 +222,51 @@ GATES = {
 }
 
 
+def _load_baseline(label: str, path: str) -> list | None:
+    """Load one gate's persisted sweep, or explain exactly how to create
+    it.  A missing file or a file without a ``sweep`` key (a corrupt or
+    hand-edited baseline) both return None after printing the fix — the
+    gate must never die with a KeyError."""
+    if not os.path.exists(path):
+        print(
+            f"# --check {label}: no baseline at {path}; run "
+            f"`python -m benchmarks.run --suite {label}` first",
+            file=sys.stderr,
+        )
+        return None
+    with open(path) as f:
+        try:
+            data = json.load(f)
+        except json.JSONDecodeError as e:
+            print(
+                f"# --check {label}: unreadable baseline {path} ({e}); "
+                f"re-run `python -m benchmarks.run --suite {label}`",
+                file=sys.stderr,
+            )
+            return None
+    sweep = data.get("sweep")
+    if not isinstance(sweep, list):
+        print(
+            f"# --check {label}: baseline {path} has no 'sweep' list; "
+            f"re-run `python -m benchmarks.run --suite {label}`",
+            file=sys.stderr,
+        )
+        return None
+    return sweep
+
+
 def _run_gate(label: str, tolerance: float, full: bool) -> int:
     """Run one suite fresh and diff it against its persisted baseline.
 
     Returns 0 clean, 1 on regression, 2 when nothing was comparable
-    (size mismatch between the fresh run and the baseline).
+    (size mismatch between the fresh run and the baseline, or no usable
+    baseline).
     """
     module_fn, path, key_fn, check_fn, metric, fmt = GATES[label]
     module = module_fn()
-    with open(path) as f:
-        baseline = json.load(f)["sweep"]
+    baseline = _load_baseline(label, path)
+    if baseline is None:
+        return 2
     for row in module.run(quick=not full):
         print(row)
     fresh = getattr(module.run, "records", [])
@@ -252,25 +290,45 @@ def _run_gate(label: str, tolerance: float, full: bool) -> int:
     return 1 if regressions else 0
 
 
-def run_check(tolerance: float, full: bool) -> int:
-    if not os.path.exists(BASELINE_PATH):
-        print(
-            f"no baseline at {BASELINE_PATH}; run the pipeline suite once "
-            "without --check to create it",
-            file=sys.stderr,
-        )
-        return 2
-    # Every baselined gate runs — one incomparable baseline must not
+def run_check(tolerance: float, full: bool, only: str | None = None) -> int:
+    """The perf gate.  ``only`` (from --only/--suite) restricts which
+    gates run; an explicitly requested gate with no baseline is an error
+    (rc 2) with a message naming the --suite run that creates it, while
+    un-requested ride-along gates merely note the skip."""
+    if only is not None:
+        labels = [n for n in only.split(",") if n]
+        unknown = [n for n in labels if n not in GATES]
+        if unknown:
+            print(
+                f"# --check: no gate for suite(s) {unknown}; gated suites "
+                f"are {list(GATES)}",
+                file=sys.stderr,
+            )
+            return 2
+    else:
+        labels = list(GATES)
+    # Every requested gate runs — one incomparable baseline must not
     # mask a real regression in a later suite.  Regression (1) outranks
     # incomparability (2) in the aggregate exit code.
     rcs = []
-    for label in GATES:
-        if label != "pipeline" and not os.path.exists(GATES[label][1]):
-            continue  # ride-along gates only run once baselined
+    for label in labels:
+        if (
+            only is None
+            and label != "pipeline"
+            and not os.path.exists(GATES[label][1])
+        ):
+            # Ride-along gates only gate once baselined — but say so.
+            print(
+                f"# --check {label}: skipped (no baseline; run "
+                f"`python -m benchmarks.run --suite {label}` to start "
+                "gating it)",
+                file=sys.stderr,
+            )
+            continue
         rcs.append(_run_gate(label, tolerance, full))
     if 1 in rcs:
         return 1
-    if 2 in rcs:
+    if 2 in rcs or not rcs:
         return 2
     return 0
 
@@ -298,7 +356,9 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.check:
-        raise SystemExit(run_check(args.check_tolerance, args.full))
+        raise SystemExit(
+            run_check(args.check_tolerance, args.full, args.only or args.suite)
+        )
 
     only = args.only or args.suite
     names = only.split(",") if only else list(SUITES)

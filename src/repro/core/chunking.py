@@ -168,6 +168,7 @@ def pipeline_step_time(
     schedule: str = "gpipe",
     interleave: int = 1,
     handoff: int = 1,
+    per_tick_copy: float = 0.0,
 ) -> float:
     """Modeled wall time of pipelining `work_per_item` split into chunks.
 
@@ -178,11 +179,36 @@ def pipeline_step_time(
     pass ``handoff=schedules.DEFAULT_HANDOFF`` to model the Future
     engine's overlapped ring (whose per-tick overhead is what is left
     after the permute hides under the cell scan).
+
+    ``per_tick_copy`` is the mutable-state traffic term: the time a tick
+    spends writing per-cell state back (KV-cache updates for a serving
+    chain — see :func:`copy_time_per_tick` for the bytes→time
+    conversion).  It is kept separate from ``per_tick_overhead`` because
+    it scales with the *state update scheme* (a whole-slab write-back
+    per microbatch is ``max_len``× a row-level scatter), which is how
+    the model distinguishes the two serving hot paths.
     """
     v = validate_schedule(schedule, interleave)
     ticks = schedule_ticks(schedule, num_stages, num_chunks, interleave, handoff)
     per_tick_compute = work_per_item / (num_stages * num_chunks * v)
-    return ticks * (per_tick_compute + per_tick_overhead)
+    return ticks * (per_tick_compute + per_tick_overhead + per_tick_copy)
+
+
+def copy_time_per_tick(
+    copy_bytes_per_tick: float, copy_bytes_per_second: float
+) -> float:
+    """Bytes a tick writes back into mutable per-cell state → seconds.
+
+    The single conversion site for the copy-bytes term: callers (the
+    serving engine's :func:`repro.serve.engine.decode_copy_bytes_per_tick`)
+    supply measured/modeled bytes and the device's effective write
+    bandwidth.
+    """
+    if copy_bytes_per_second <= 0:
+        raise ValueError(
+            f"copy_bytes_per_second must be > 0, got {copy_bytes_per_second}"
+        )
+    return copy_bytes_per_tick / copy_bytes_per_second
 
 
 def optimal_num_chunks(
@@ -193,6 +219,7 @@ def optimal_num_chunks(
     schedule: str = "gpipe",
     interleave: int = 1,
     handoff: int = 1,
+    per_tick_copy: float = 0.0,
 ) -> int:
     """Minimize modeled step time over the number of chunks M.
 
@@ -202,17 +229,21 @@ def optimal_num_chunks(
     refined by evaluating integer neighbors so the kink at M = h*S in
     the interleaved tick count is respected.  Clipped to
     [1, max_chunks].  When overhead dominates (paper's primes case)
-    M* -> 1: don't pipeline fine-grained work.
+    M* -> 1: don't pipeline fine-grained work.  ``per_tick_copy`` joins
+    ``c`` in the closed form (both are fixed per-tick costs), so heavy
+    state write-back pushes toward fewer, bigger chunks — and shrinking
+    it (the row-scatter path) buys chunks back.
     """
     v = validate_schedule(schedule, interleave)
-    if num_stages <= 1 or per_tick_overhead <= 0:
+    per_tick_fixed = per_tick_overhead + per_tick_copy
+    if num_stages <= 1 or per_tick_fixed <= 0:
         return max_chunks
     m_star = (
         math.sqrt(
             handoff
             * work_per_item
             * (num_stages - 1)
-            / (num_stages * per_tick_overhead)
+            / (num_stages * per_tick_fixed)
         )
         / v
     )
@@ -238,6 +269,7 @@ def optimal_num_chunks(
                 schedule,
                 interleave,
                 handoff,
+                per_tick_copy,
             ),
             m,
         ),
@@ -268,9 +300,17 @@ def optimal_schedule(
     num_sources: int = 1,
     chunks_divide: int | None = None,
     backward: str = "autodiff",
+    per_tick_copy: float = 0.0,
 ) -> ScheduleChoice:
     """Pick (schedule, M, V) jointly: minimize modeled step time subject
     to a peak-activation budget.
+
+    ``per_tick_copy`` is the per-tick mutable-state write-back time (see
+    :func:`pipeline_step_time` / :func:`copy_time_per_tick`) — the
+    serving engines' copy-bytes term.  Because it is a fixed tick cost,
+    it penalizes exactly the schedules that multiply tick count
+    (interleaving's V× ticks buy less when every tick pays the copy),
+    which is why the joint pick must see it.
 
     ``memory_budget_items`` caps ``schedule_peak_items(...) / M`` — peak
     stash measured in units of the *whole* item's activation footprint
@@ -306,7 +346,8 @@ def optimal_schedule(
     best: ScheduleChoice | None = None
     for name, v in grid:
         m0 = optimal_num_chunks(
-            work_per_item, num_stages, per_tick_overhead, max_chunks, name, v, handoff
+            work_per_item, num_stages, per_tick_overhead, max_chunks, name, v,
+            handoff, per_tick_copy,
         )
         # scan a neighborhood: the memory constraint may push M up past
         # the unconstrained optimum (more, smaller chunks stash less).
@@ -341,7 +382,8 @@ def optimal_schedule(
                 if peak > memory_budget_items:
                     continue
             t = pipeline_step_time(
-                work_per_item, num_stages, m, per_tick_overhead, name, v, handoff
+                work_per_item, num_stages, m, per_tick_overhead, name, v,
+                handoff, per_tick_copy,
             )
             cand = ScheduleChoice(
                 schedule=name,

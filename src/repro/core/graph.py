@@ -181,7 +181,15 @@ class MaskNode(Node):
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class SegmentNode(Node):
-    """A chain segment: ``num_cells`` dependent cells with stacked state."""
+    """A chain segment: ``num_cells`` dependent cells with stacked state.
+
+    ``const_state`` holds *read-only* per-cell leaves (layer parameters,
+    admission payloads — anything the cells consult but never write).
+    Evaluators thread it as scan ``xs`` only: it never enters a scan
+    carry, a ``lax.cond`` output, or a per-tick state write-back, so it
+    is never copied on the hot path.  With ``const_state`` given, the
+    cell signature is ``cell_fn(const, state, item) -> (state', item')``.
+    """
 
     cell_fn: CellFn
     init_state: PyTree
@@ -189,6 +197,7 @@ class SegmentNode(Node):
     mutable_state: bool
     remat: bool
     upstream: Node
+    const_state: PyTree | None = None
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -363,6 +372,7 @@ class Stream:
         num_cells: int | None = None,
         mutable_state: bool = True,
         remat: bool = False,
+        const_state: PyTree | None = None,
     ) -> "Stream":
         """A chain segment: ``num_cells`` dependent cells, item-ordered.
 
@@ -370,6 +380,15 @@ class Stream:
         are stacked with leading axis ``num_cells`` (inferred when not
         given).  Segments compose back-to-back: ``s.through(f, a).through
         (g, b)`` is a longer chain, pipelined as one by the Future engine.
+
+        ``const_state`` threads *read-only* per-cell leaves (leading axis
+        ``num_cells``) to the cells as scan ``xs`` only — never written
+        back, never carried, never copied per tick.  The cell signature
+        becomes ``cell_fn(const, state, item) -> (state', item')``; final
+        states returned by :meth:`collect` cover the mutable
+        ``init_state`` only.  This is the read-only/mutable state split:
+        layer parameters ride ``const_state``, the KV cache rides
+        ``init_state``.
         """
         inferred = leading_axis_size(init_state, "init_state")
         if num_cells is None:
@@ -381,6 +400,13 @@ class Stream:
             )
         if num_cells < 1:
             raise ValueError(f"num_cells must be >= 1, got {num_cells}")
+        if const_state is not None:
+            const_cells = leading_axis_size(const_state, "const_state")
+            if const_cells != num_cells:
+                raise ValueError(
+                    f"const_state leaves must have leading axis num_cells="
+                    f"{num_cells}, got {const_cells}"
+                )
         return Stream(
             SegmentNode(
                 cell_fn=cell_fn,
@@ -389,6 +415,7 @@ class Stream:
                 mutable_state=mutable_state,
                 remat=remat,
                 upstream=self._node,
+                const_state=const_state,
             )
         )
 
@@ -483,19 +510,49 @@ def _mask_fn(pred):
 # ---------------------------------------------------------------------------
 
 
+def _const_cell(cell_fn: CellFn, has_const: bool) -> CellFn:
+    """Canonical 3-arg cell ``(const, state, item) -> (state', item')``.
+
+    Segments without ``const_state`` get an adapter ignoring the (empty)
+    const row, so every executor threads one signature: const rides scan
+    ``xs``, state rides the carry/ys.
+    """
+    if has_const:
+        return cell_fn
+    return lambda _const, state, item: cell_fn(state, item)
+
+
+def scan_cell(cell_fn: CellFn, mutable: bool):
+    """The one cell-loop scan body every executor uses: carry = the
+    flowing item, xs = ``(const_row, state_row)``, ys = the (possibly
+    frozen) new state row.  A single definition site — Lazy ≡ Future
+    bit-equality rests on the per-cell primitive sequence being
+    identical, so the wrapper must never fork per executor."""
+
+    def cell(flowing, xs):
+        cst, state = xs
+        new_state, out = cell_fn(cst, state, flowing)
+        if not mutable:
+            new_state = state
+        return out, new_state
+
+    return cell
+
+
 def _run_segment(node: SegmentNode, items: PyTree) -> tuple[PyTree, PyTree]:
-    """The Lazy monad on one segment: scan items (outer) over cells (inner)."""
-    cell_fn = jax.checkpoint(node.cell_fn) if node.remat else node.cell_fn
-    mutable = node.mutable_state
+    """The Lazy monad on one segment: scan items (outer) over cells (inner).
+
+    ``const_state`` (when present) is closed over and delivered per cell
+    as inner-scan xs alongside the mutable rows — read-only by
+    construction (no ys, no carry, no write-back)."""
+    cell_fn = _const_cell(node.cell_fn, node.const_state is not None)
+    if node.remat:
+        cell_fn = jax.checkpoint(cell_fn)
+    const = node.const_state  # None is an empty pytree: scans thread it
+    cell = scan_cell(cell_fn, node.mutable_state)
 
     def item_step(states, item):
-        def cell(flowing, state):
-            new_state, out = cell_fn(state, flowing)
-            if not mutable:
-                new_state = state
-            return out, new_state
-
-        out, new_states = lax.scan(cell, item, states)
+        out, new_states = lax.scan(cell, item, (const, states))
         return new_states, out
 
     return lax.scan(item_step, node.init_state, items)
@@ -562,6 +619,8 @@ class ChainSegment:
     # (a spine map pushed into its consumer — Clash-of-the-Lambdas-style
     # push fusion).  Must preserve the flowing item structure.
     pre_fn: Callable[[PyTree], PyTree] | None = None
+    # Read-only per-cell leaves (scan xs only — see SegmentNode).
+    const_state: PyTree | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -719,6 +778,7 @@ def lower_chain(sink: Node) -> ChainProgram:
                     num_cells=node.num_cells,
                     mutable_state=node.mutable_state,
                     remat=node.remat,
+                    const_state=node.const_state,
                 )
             )
             consumer = "segment"
@@ -841,6 +901,11 @@ class UnifiedChain:
     ``lax.switch``, applying a segment's fused ``pre_fn`` only at its
     first cell, so per-cell compute stays one segment's cell.
     ``split_states(final)`` recovers per-segment final states.
+
+    ``const_state`` mirrors the same padded-parts layout for segments'
+    read-only state (``None`` when no segment has any): the unified
+    ``cell_fn`` is the canonical 3-arg form, with the const row arriving
+    as scan xs — never carried, never written back.
     """
 
     cell_fn: CellFn
@@ -849,6 +914,7 @@ class UnifiedChain:
     mutable_state: bool
     remat: bool
     split_states: Callable[[PyTree], tuple[PyTree, ...]]
+    const_state: PyTree | None = None
 
 
 def _check_pre_fn_structure(pre_fn, item) -> None:
@@ -894,19 +960,37 @@ def unify_segments(segments: tuple[ChainSegment, ...]) -> UnifiedChain:
     )
     init_state = {"seg": seg_id, "pos": pos, "parts": parts}
 
+    any_const = any(s.const_state is not None for s in segments)
+    const_state = None
+    if any_const:
+        const_state = {
+            "parts": tuple(
+                None
+                if s.const_state is None
+                else jax.tree.map(lambda l, _i=i: _pad(l, _i), s.const_state)
+                for i, s in enumerate(segments)
+            )
+        }
+
     cell_fns = [
-        jax.checkpoint(s.cell_fn) if s.remat else s.cell_fn for s in segments
+        _const_cell(s.cell_fn, s.const_state is not None)
+        for s in segments
+    ]
+    cell_fns = [
+        jax.checkpoint(fn) if s.remat else fn
+        for fn, s in zip(cell_fns, segments)
     ]
 
     def branch(i):
         seg = segments[i]
 
-        def run(urow, item):
+        def run(crow, urow, item):
             it = item
             if seg.pre_fn is not None:
                 _check_pre_fn_structure(seg.pre_fn, item)
                 it = lax.cond(urow["pos"] == 0, seg.pre_fn, lambda x: x, item)
-            new_si, out = cell_fns[i](urow["parts"][i], it)
+            crow_i = crow["parts"][i] if any_const else None
+            new_si, out = cell_fns[i](crow_i, urow["parts"][i], it)
             if not seg.mutable_state:
                 new_si = urow["parts"][i]
             new_parts = urow["parts"][:i] + (new_si,) + urow["parts"][i + 1 :]
@@ -916,8 +1000,8 @@ def unify_segments(segments: tuple[ChainSegment, ...]) -> UnifiedChain:
 
     branches = [branch(i) for i in range(len(segments))]
 
-    def cell_fn(urow, item):
-        return lax.switch(urow["seg"], branches, urow, item)
+    def cell_fn(crow, urow, item):
+        return lax.switch(urow["seg"], branches, crow, urow, item)
 
     def split_states(final_state):
         return tuple(
@@ -938,6 +1022,7 @@ def unify_segments(segments: tuple[ChainSegment, ...]) -> UnifiedChain:
         # remat is applied per-branch above, never re-wrapped outside.
         remat=False,
         split_states=split_states,
+        const_state=const_state,
     )
 
 
@@ -973,18 +1058,30 @@ def _check_emit_structure(emit, item) -> None:
 
 
 def _chain_cell_machinery(chain: "ChainProgram"):
-    """(cell_fn, init_state, mutable, split_states) for a lowered chain —
-    the raw fast path for one plain segment, the switch-dispatched
-    unified state otherwise.  Shared by both executors so the per-cell
-    primitive sequence (hence bit-equality) is identical."""
+    """(cell_fn, init_state, const_state, mutable, split_states) for a
+    lowered chain — the raw fast path for one plain segment, the
+    switch-dispatched unified state otherwise.  Shared by both executors
+    so the per-cell primitive sequence (hence bit-equality) is identical.
+    ``cell_fn`` is always the canonical 3-arg form ``(const, state, item)
+    -> (state', item')``; ``const_state`` is None for const-free chains
+    (executors still pass it — None threads through scans as an empty
+    pytree, so one call shape serves both)."""
     if not chain.segments:
-        return None, (), False, lambda fs: ()
+        return None, (), None, False, lambda fs: ()
     if len(chain.segments) == 1 and chain.segments[0].pre_fn is None:
         seg = chain.segments[0]
-        cell_fn = jax.checkpoint(seg.cell_fn) if seg.remat else seg.cell_fn
-        return cell_fn, seg.init_state, seg.mutable_state, lambda fs: (fs,)
+        cell_fn = _const_cell(seg.cell_fn, seg.const_state is not None)
+        if seg.remat:
+            cell_fn = jax.checkpoint(cell_fn)
+        return (
+            cell_fn, seg.init_state, seg.const_state, seg.mutable_state,
+            lambda fs: (fs,),
+        )
     uni = unify_segments(chain.segments)
-    return uni.cell_fn, uni.init_state, uni.mutable_state, uni.split_states
+    return (
+        uni.cell_fn, uni.init_state, uni.const_state, uni.mutable_state,
+        uni.split_states,
+    )
 
 
 def run_chain_sequential(chain: "ChainProgram") -> tuple[tuple, PyTree]:
@@ -1002,7 +1099,9 @@ def run_chain_sequential(chain: "ChainProgram") -> tuple[tuple, PyTree]:
     n = chain.num_items
     feeds = [inj.materialize() for inj in chain.injections]
     fb = chain.feedback
-    cell_fn, init_state, mutable, split_states = _chain_cell_machinery(chain)
+    cell_fn, init_state, const_state, mutable, split_states = (
+        _chain_cell_machinery(chain)
+    )
 
     entry = [
         i for i, inj in enumerate(chain.injections)
@@ -1030,14 +1129,10 @@ def run_chain_sequential(chain: "ChainProgram") -> tuple[tuple, PyTree]:
                 if chain.injections[i].cell_index == a:
                     flow = chain.injections[i].combine(flow, src_items[str(i)])
             sub = jax.tree.map(lambda l: l[a:b], states)
-
-            def cell(fl, st):
-                new_st, out = cell_fn(st, fl)
-                if not mutable:
-                    new_st = st
-                return out, new_st
-
-            flow, new_sub = lax.scan(cell, flow, sub)
+            sub_const = jax.tree.map(lambda l: l[a:b], const_state)
+            flow, new_sub = lax.scan(
+                scan_cell(cell_fn, mutable), flow, (sub_const, sub)
+            )
             parts.append(new_sub)
         if not parts:
             return states, flow

@@ -126,6 +126,21 @@ Feedback arcs
     ``(0, m)`` for ``m >= L`` has ``read_slot >= 0`` — a fed-back
     entry — instead of a carousel consume.
 
+Emit placement (feedback plans only)
+    ``emit[t, d]`` marks the units whose produced item must pass
+    through the feedback ``emit`` (final-norm → logits → sample →
+    re-embed for a decode chain) before being collected and handed
+    back on the ring.  It equals ``collect`` on feedback plans and is
+    all-zero otherwise, but is a separate column on purpose: emit
+    placement is part of the plan contract, and the builder guarantees
+    ``emit`` is nonzero **only on the device owning the final virtual
+    stage** (device D-1 — virtual stage ``D*V - 1`` lives there).
+    That is the plan-level half of the last-stage-only emit split: the
+    executor keys the emit region off this column, so the LM head is
+    structurally confined to one device's conditional region and the
+    other D-1 devices' tick bodies never execute it (HLO-asserted in
+    the serving tests).
+
 Stash/release columns (combined plans only)
     :class:`CombinedPlan` adds ``stash_slot[t, d]`` (the per-device
     stash color an F unit's input activation is saved into; -1
@@ -211,6 +226,9 @@ class SchedulePlan:
     # b - feedback_lag's final output; only the first feedback_lag items
     # are primary-source fed.  None = ordinary feed-forward plan.
     feedback_lag: int | None = None
+    # Emit placement (see the column contract): == collect on feedback
+    # plans, all-zero otherwise; nonzero only on the final-stage device.
+    emit: np.ndarray | None = None
 
     @property
     def num_sources(self) -> int:
@@ -499,6 +517,12 @@ def build_plan(
             group[tt, dev] = p // d_
             if p == num_positions - 1:
                 collect[tt, dev] = 1
+    # Emit placement: under feedback, exactly the final-position units
+    # (what collect marks); the final virtual stage D*V-1 lives on device
+    # D-1, so emit is last-stage-only by construction — asserted here so
+    # the executor may key its only head region off this column.
+    emit = collect.copy() if feedback_lag is not None else np.zeros_like(collect)
+    assert emit[:, : d_ - 1].sum() == 0, "emit must be last-stage-only"
 
     # -- item-feed carousels (one per source) ------------------------------
     # Source s's items are round-robin sharded with offset dev_s =
@@ -580,6 +604,7 @@ def build_plan(
         src_feed_advance=src_feed_advance,
         src_consume=src_consume,
         feedback_lag=feedback_lag,
+        emit=emit,
     )
 
 
@@ -634,6 +659,7 @@ def build_backward_plan(
         read_slot=flip(fwd.read_slot),
         recv_slot=flip(fwd.recv_slot),
         collect=flip(fwd.collect),
+        emit=flip(fwd.emit),
         inject_devices=(num_stages - 1,),
     )
 

@@ -448,9 +448,12 @@ class FutureEvaluator:
 
         # One fused chain: raw fast path for a single plain segment (the
         # common case, and bit/HLO-identical to the pre-algebra engine);
-        # switch-dispatched unified state otherwise.
-        cell_fn, init_state, mutable, split_states = G._chain_cell_machinery(
-            chain
+        # switch-dispatched unified state otherwise.  const_state is the
+        # read-only half of the split: stage-sharded like the mutable
+        # state, but delivered to the cells as scan xs only — it never
+        # enters the tick carry, the idle-tick cond, or a write-back.
+        cell_fn, init_state, const_state, mutable, split_states = (
+            G._chain_cell_machinery(chain)
         )
 
         # Device-major cell layout: device d's shard holds its V groups
@@ -467,6 +470,7 @@ class FutureEvaluator:
         inv_perm = np.argsort(perm)
         if v_ > 1:
             init_state = jax.tree.map(lambda x: x[perm], init_state)
+            const_state = jax.tree.map(lambda x: x[perm], const_state)
 
         # Per-source round-robin feed shards: global (D, J, ...) with a
         # rotation offset so source s's item m sits on its injection
@@ -539,6 +543,7 @@ class FutureEvaluator:
             "rslot": jnp.asarray(plan.read_slot),
             "cslot": jnp.asarray(plan.recv_slot),
             "coll": jnp.asarray(plan.collect),
+            "emit": jnp.asarray(plan.emit),
             # (num_ticks, num_sources): transposed so scan slices a
             # per-tick row; the python loop over sources indexes it
             # statically.
@@ -548,7 +553,7 @@ class FutureEvaluator:
             "src_consume": jnp.asarray(plan.src_consume.T),
         }
 
-        def pipelined(stage_ids, local_states, local_feeds):
+        def pipelined(stage_ids, local_states, local_consts, local_feeds):
             # Stage index arrives as a stage-sharded input rather than
             # lax.axis_index: the latter lowers to PartitionId, which the
             # 0.4.x SPMD partitioner rejects inside partial-manual regions.
@@ -586,18 +591,23 @@ class FutureEvaluator:
                     lambda x: x.reshape((v_, cells_per_group) + x.shape[1:]),
                     local_states,
                 )
+                local_consts = jax.tree.map(
+                    lambda x: x.reshape((v_, cells_per_group) + x.shape[1:]),
+                    local_consts,
+                )
 
-            def group_scan(states_g, flowing):
+            def group_scan(const_g, states_g, flowing):
                 # One device-group = Lazy scan over its local cells: the
                 # Future monad wraps whole chunks of the chain (the
                 # paper's §7 grouping, applied to cells as well as items).
-                def cell(fl, st):
-                    new_st, out = cell_fn(st, fl)
-                    if not mutable:
-                        new_st = st
-                    return out, new_st
-
-                out, new_states = lax.scan(cell, flowing, states_g)
+                # The const rows ride the xs side only: read per cell,
+                # never part of the carry or the ys write-back.
+                # G.scan_cell is the shared scan body — the per-cell
+                # primitive sequence must match the Lazy executors'.
+                out, new_states = lax.scan(
+                    G.scan_cell(cell_fn, mutable), flowing,
+                    (const_g, states_g),
+                )
                 return new_states, out
 
             def tick(carry, x):
@@ -668,8 +678,15 @@ class FutureEvaluator:
                         ),
                         states,
                     )
+                    const_g = jax.tree.map(
+                        lambda s: lax.dynamic_index_in_dim(
+                            s, grp, keepdims=False
+                        ),
+                        local_consts,
+                    )
                 else:
                     states_g = states
+                    const_g = local_consts
                 valid = mb >= 0
                 if mutable:
                     # Idle ticks (fill/drain) skip the cell scan *and*
@@ -678,21 +695,29 @@ class FutureEvaluator:
                     # byte per tick — the dominant cost of a serving
                     # chain whose state is the KV cache.  Invalid-tick
                     # outputs are never collected, stored, or read, so
-                    # passing the input through is unobservable.
+                    # passing the input through is unobservable.  The
+                    # const rows are a closure capture of the taken
+                    # branch, not a cond output — read-only state is
+                    # structurally exempt from the write-back.
                     new_sg, out = lax.cond(
                         valid,
-                        lambda args: group_scan(*args),
+                        lambda args: group_scan(const_g, *args),
                         lambda args: args,
                         (states_g, inp),
                     )
                 else:
-                    new_sg, out = group_scan(states_g, inp)
+                    new_sg, out = group_scan(const_g, states_g, inp)
                 if fb is not None:
                     # Final virtual stage: the emitted item is both the
                     # collected output and — one ring hop later — the
-                    # entry input of item mb + lag.  `collect` marks
-                    # exactly the final-position units.
-                    out = lax.cond(coll > 0, fb.emit, lambda o: o, out)
+                    # entry input of item mb + lag.  The plan's emit
+                    # column (last-stage-only by construction) keys the
+                    # sole region containing the LM head: every other
+                    # device's tick body never takes this branch, and
+                    # the HLO keeps the head matmul conditional-guarded
+                    # (asserted in the serving tests).
+                    emit_here = jnp.take(x["emit"], stage)
+                    out = lax.cond(emit_here > 0, fb.emit, lambda o: o, out)
                 if mutable:
                     if v_ > 1:
                         states = jax.tree.map(
@@ -769,13 +794,14 @@ class FutureEvaluator:
             in_specs=(
                 jax.sharding.PartitionSpec(axis),
                 spec_shard(init_state),
+                spec_shard(const_state),
                 tuple(spec_shard(f) for f in feeds_fed),
             ),
             out_specs=(spec_shard(init_state), spec_shard(flow_shape)),
             axis_names={axis},
         )
         final_states, outs = pipelined(
-            jnp.arange(d_, dtype=jnp.int32), init_state, feeds_fed
+            jnp.arange(d_, dtype=jnp.int32), init_state, const_state, feeds_fed
         )
         if v_ > 1:
             final_states = jax.tree.map(lambda x: x[inv_perm], final_states)
@@ -858,8 +884,8 @@ class FutureEvaluator:
             )
         cells_per_group = chain.num_cells // num_virtual
 
-        cell_fn, init_state, mutable, split_states = G._chain_cell_machinery(
-            chain
+        cell_fn, init_state, const_state, mutable, split_states = (
+            G._chain_cell_machinery(chain)
         )
         if mutable:
             raise ValueError(
@@ -869,6 +895,15 @@ class FutureEvaluator:
                 "cells do not mutate state across items; use "
                 "backward='autodiff'"
             )
+        if const_state is not None:
+            raise ValueError(
+                "backward='planned' does not support const_state segments "
+                "(const leaves are excluded from differentiation by "
+                "construction); put read-only differentiable state in an "
+                "ordinary mutable_state=False segment, or use "
+                "backward='autodiff'"
+            )
+        cell_fn = lambda st, it, _f=cell_fn: _f(None, st, it)
 
         src = chain.injections[0].materialize()
         for leaf in jax.tree.leaves(src):

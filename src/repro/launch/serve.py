@@ -59,6 +59,23 @@ def main(argv=None):
     ap.add_argument("--num-layers", type=int, default=0,
                     help="override layer count (smoke configs have only "
                     "2 groups — deepen them so --cells can split)")
+    ap.add_argument("--suggest-schedule", action="store_true",
+                    help="print chunking.optimal_schedule's pick with the "
+                    "decode cache-traffic (per-tick copy-bytes) term "
+                    "before serving; compute terms come from "
+                    "--model-work/--model-overhead (measure with "
+                    "`benchmarks.run --suite serve` — only the copy "
+                    "bytes are derived from the model config)")
+    ap.add_argument("--model-work", type=float, default=1e-3,
+                    help="modeled serial decode-step seconds per item "
+                    "for --suggest-schedule (an assumption, not a "
+                    "measurement)")
+    ap.add_argument("--model-overhead", type=float, default=1e-5,
+                    help="modeled per-tick dispatch overhead seconds "
+                    "for --suggest-schedule")
+    ap.add_argument("--model-copy-gbps", type=float, default=50.0,
+                    help="modeled cache write bandwidth (GB/s) for the "
+                    "copy-bytes term")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -90,10 +107,47 @@ def main(argv=None):
             schedule=args.schedule, interleave=args.interleave,
             round_steps=args.round_steps, admit_per_round=args.admit_per_round,
         )
+        if args.suggest_schedule and ndev <= 1:
+            print(
+                "suggest-schedule: skipped — needs > 1 pipeline device "
+                "(set --devices/XLA device forcing); there is no "
+                "(schedule, M, V) choice on one device"
+            )
+        if args.suggest_schedule and ndev > 1:
+            from repro.serve.engine import (
+                decode_copy_bytes_per_tick, suggest_decode_pipeline,
+            )
+
+            mb = max(1, args.max_batch // args.microbatches)
+            pick = suggest_decode_pipeline(
+                cfg, devices=ndev, work_per_item=args.model_work,
+                per_tick_overhead=args.model_overhead, microbatch=mb,
+                num_cells=args.cells, max_len=args.max_len,
+                copy_bytes_per_second=args.model_copy_gbps * 1e9,
+                max_chunks=args.max_batch,
+            )
+            rows_b = decode_copy_bytes_per_tick(cfg, mb, args.cells)
+            slab_b = decode_copy_bytes_per_tick(
+                cfg, mb, args.cells, row_scatter=False, max_len=args.max_len
+            )
+            print(
+                f"cost-model pick (ASSUMING work/item={args.model_work}s, "
+                f"tick overhead={args.model_overhead}s, "
+                f"{args.model_copy_gbps:.0f} GB/s — override with "
+                f"--model-*; only the copy bytes are config-derived): "
+                f"{pick.schedule} M={pick.num_chunks} V={pick.interleave}; "
+                f"per-tick cache rows ≈ {rows_b} B vs {slab_b} B under "
+                f"the slab scheme"
+            )
         eng = StreamEngine(params, cfg, scfg, pcfg, mesh=mesh)
         mode = (f"stream/{args.schedule}xV{args.interleave} D={ndev} "
                 f"S={args.cells} M={args.microbatches} T={args.round_steps}")
     else:
+        if args.suggest_schedule:
+            print(
+                "suggest-schedule: skipped — the cost model picks a "
+                "pipeline (schedule, M, V); run with --engine stream"
+            )
         eng = Engine(params, cfg, scfg)
         mode = "sequential"
     np_rng = np.random.default_rng(args.seed)

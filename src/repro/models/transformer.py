@@ -13,8 +13,9 @@ Step kinds:
   * ``decode_step``  — one token per sequence against preallocated caches.
   * decode *cells*   — the same decode math split into ``num_cells``
     contiguous layer-group pipeline cells (``split_decode_cells`` /
-    ``make_decode_cell`` / ``make_decode_emit``), each owning its layer
-    params and KV/SSD cache shard as mutable per-cell Stream state; the
+    ``make_decode_cell`` / ``make_decode_emit``): layer params ride the
+    Stream's read-only ``const_state``, each cell's KV/SSD cache shard
+    is its mutable state (updated by row-level scatters only); the
     serving engine runs them under ``Stream.feedback`` so the sampled
     token re-enters as the next item.
 """
@@ -205,12 +206,20 @@ def _norm(cfg, params, x):
 def _self_attn(
     params, x, cfg, *, positions, cache=None, cache_pos=None, kv_len=None,
     attn_impl="dense", q_chunk=512, kv_chunk=1024, causal_skip=None,
+    collect_rows=False,
 ):
     """Self-attention; with cache: decode/chunked-prefill.
 
     Decode (S==1): ``cache_pos`` is (B,) per-sequence write positions.
     Chunked prefill (S>1): ``cache_pos`` is a scalar chunk offset; the
     chunk is written at [pos, pos+S) and attends causally to the cache.
+
+    ``collect_rows`` (decode only): instead of the updated K/V slabs,
+    return just the written rows ``{"k": (B, KV, dh), "v": ...}`` — the
+    caller scatters them into its full cache buffer at row level, so no
+    slab-sized value ever rides a scan ys or a carry write-back.
+    Attention still reads the functionally-updated slab (its compute
+    operand), so outputs are bitwise unchanged.
     """
     q, k, v = L.attn_project_qkv(params, x, cfg, positions)
     new_cache = None
@@ -227,7 +236,15 @@ def _self_attn(
             ck = lax.dynamic_update_slice(cache["k"], k, start)
             cv = lax.dynamic_update_slice(cache["v"], v, start)
             causal, q_offset = True, cache_pos
-        new_cache = {"k": ck, "v": cv}
+        if collect_rows:
+            if s != 1:
+                raise ValueError("collect_rows is a decode-path (S==1) mode")
+            new_cache = {
+                "k": k[:, 0].astype(cache["k"].dtype),
+                "v": v[:, 0].astype(cache["v"].dtype),
+            }
+        else:
+            new_cache = {"k": ck, "v": cv}
         ctx = L.attention(
             q, ck, cv, impl=attn_impl, causal=causal, q_offset=q_offset,
             kv_len=kv_len, q_chunk=q_chunk, kv_chunk=kv_chunk,
@@ -277,8 +294,17 @@ def _apply_group(
     q_chunk=512,
     kv_chunk=1024,
     causal_skip=None,
+    cache_rows=False,
 ):
-    """Apply one period group.  Returns (x, new_group_cache, aux_losses)."""
+    """Apply one period group.  Returns (x, new_group_cache, aux_losses).
+
+    ``cache_rows`` (decode only): attention blocks return just the K/V
+    rows written this step (see ``_self_attn(collect_rows=True)``) and
+    cross-attention blocks return nothing (their vision K/V never
+    changes during decode); SSM blocks return their per-sequence state
+    as usual — it is row-sized already.  The caller owns the row-level
+    scatter into its full cache.
+    """
     new_cache: dict[str, PyTree] = {}
     aux = {"moe_lb_loss": 0.0, "moe_z_loss": 0.0, "moe_drop_fraction": 0.0}
     num_moe = 0
@@ -292,6 +318,7 @@ def _apply_group(
                 positions=positions, cache=cache_i, cache_pos=cache_pos,
                 kv_len=kv_len, attn_impl=attn_impl,
                 q_chunk=q_chunk, kv_chunk=kv_chunk, causal_skip=causal_skip,
+                collect_rows=cache_rows,
             )
             if c_new is not None:
                 new_cache[f"block{i}"] = c_new
@@ -307,7 +334,7 @@ def _apply_group(
                 vision_kv=vkv, vision_embeds=vision_embeds,
                 attn_impl=attn_impl, q_chunk=q_chunk, kv_chunk=kv_chunk,
             )
-            if collect_kv or group_cache is not None:
+            if (collect_kv or group_cache is not None) and not cache_rows:
                 new_cache[f"block{i}"] = vkv_new
         else:  # mamba
             cache_i = None if group_cache is None else group_cache.get(f"block{i}")
@@ -538,6 +565,16 @@ def prefill_step(
 # pos/tok (identical to the sequential engine, which batches them too);
 # their cache writes land at the frozen position < max_len and are
 # overwritten at the next admission.
+#
+# Hot-path discipline (the const-state / row-scatter contract):
+#   * layer params and the admission payload ride the Stream's
+#     `const_state` — scan xs only, stage-sharded, never written back;
+#   * the KV/SSD cache is the only mutable per-cell state, and a steady
+#     decode tick touches it with row-level scatters only: attention
+#     writes the one new (B, KV, dh) row per layer at its per-sequence
+#     position, SSM blocks write their (row-sized) per-sequence state —
+#     no microbatch slab is ever sliced out, carried through a scan ys,
+#     or written back whole.
 
 
 def _split_cells(tree, num_cells: int):
@@ -553,20 +590,26 @@ def _split_cells(tree, num_cells: int):
 
 
 def split_decode_cells(params, caches, num_cells: int):
-    """Slice stacked caches into ``num_cells`` contiguous layer-group
-    cells (leading axis ``num_cells`` — Stream per-cell state).  Leaves
-    (groups, ...) become (num_cells, groups/num_cells, ...).
+    """Slice params and caches into ``num_cells`` contiguous layer-group
+    cells.  Leaves (groups, ...) become (num_cells, groups/num_cells,
+    ...).
 
-    The *mutable* per-cell state is ``{"idx", "cache"}`` only: layer
-    params are immutable, so :func:`make_decode_cell` closes over the
-    whole stack and gathers its cell's slice by ``idx`` — keeping
-    megabytes of weights out of the pipeline's per-tick state
-    write-backs (they would otherwise be copied every tick)."""
-    del params  # params ride the cell_fn closure, not the mutable state
-    return {
-        "idx": jnp.arange(num_cells, dtype=jnp.int32),
-        "cache": _split_cells(caches, num_cells),
-    }
+    Returns ``(const_state, state)`` — the Stream contract's read-only /
+    mutable split:
+
+    * ``const_state = {"blocks": ...}`` — each cell's layer-group params,
+      threaded via ``Stream.through(..., const_state=...)``: delivered as
+      scan xs (and stage-sharded by the Future engine, so weights are
+      neither replicated per device nor gathered per tick), never
+      written back.  The engine merges the per-round admission payload
+      in as ``const_state["adm"]`` — it is read-only within a round too.
+    * ``state = {"cache": ...}`` — the per-cell KV/SSD cache shard, the
+      only thing the cells mutate.
+    """
+    return (
+        {"blocks": _split_cells(params["blocks"], num_cells)},
+        {"cache": _split_cells(caches, num_cells)},
+    )
 
 
 def merge_decode_caches(cell_states) -> PyTree:
@@ -606,9 +649,43 @@ def stack_admission_payload(singles, slots, steps, mbs, num_cells: int):
     return {"cache": cache, **meta} if a_ else meta
 
 
+def scatter_decode_rows(cache, rows, plans, *, mb0, batch_idx, pos):
+    """Row-level scatter of one decode step's cache writes.
+
+    ``cache`` is a cell's full-batch cache shard (leaves ``(gpc, B,
+    ...)``); ``rows`` the per-group rows the step produced
+    (``_apply_group(cache_rows=True)`` stacked over the cell's group
+    scan).  Attention K/V rows land at ``[:, batch_idx, pos]`` — one
+    ``(KV, dh)`` row per sequence, an in-place scatter on the tick
+    carry; SSM conv/state rows (whole per-sequence states) land as one
+    contiguous ``dynamic_update_slice`` on the batch axis at ``mb0``.
+    Cross-attention vision K/V never changes during decode and is left
+    untouched.  Bytes written per tick: the rows themselves — the
+    max_len-sized slab never moves.
+    """
+    out = dict(cache)
+    for i, plan in enumerate(plans):
+        key = f"block{i}"
+        if key not in rows or key not in cache:
+            continue
+        if plan.mixer == "attn":
+            out[key] = {
+                "k": cache[key]["k"].at[:, batch_idx, pos].set(rows[key]["k"]),
+                "v": cache[key]["v"].at[:, batch_idx, pos].set(rows[key]["v"]),
+            }
+        elif plan.mixer == "mamba":
+            out[key] = jax.tree.map(
+                lambda full, mb: lax.dynamic_update_slice_in_dim(
+                    full, mb.astype(full.dtype), mb0, axis=1
+                ),
+                cache[key],
+                rows[key],
+            )
+    return out
+
+
 def make_decode_cell(
     cfg: ArchConfig,
-    params,
     *,
     num_cells: int,
     microbatch: int,
@@ -618,22 +695,24 @@ def make_decode_cell(
 ):
     """One pipeline cell of the decode stream.
 
-    ``cell_fn(state, item) -> (state', item')`` where ``state`` holds
-    this cell's index (its layer-group params are gathered from the
-    closed-over stack — immutable weights never enter the mutable
-    state), its cache shard for the *whole* batch, and (with
-    ``admissions > 0``) the in-plan admission buffer: freshly prefilled
-    whole-slot cache columns installed the moment this cell first sees
-    item ``(step, mb)`` — continuous batching executed by the plan, not
-    by host Python between steps.
+    ``cell_fn(const, state, item) -> (state', item')`` — the canonical
+    const-state cell: ``const`` holds this cell's layer-group params
+    (``const["blocks"]``, delivered by the evaluator as scan xs — no
+    per-tick gather, no per-device replication) and, with ``admissions >
+    0``, the in-plan admission buffer ``const["adm"]``: freshly
+    prefilled whole-slot cache columns installed the moment this cell
+    first sees item ``(step, mb)`` — continuous batching executed by
+    the plan, not by host Python between steps.  ``state`` holds only
+    the cell's cache shard, and a steady tick touches it exclusively
+    through :func:`scatter_decode_rows` — the microbatch slab is read
+    (the attention operand) but never sliced out/written back.
     """
     plans = block_plans(cfg)
-    cell_blocks = _split_cells(params["blocks"], num_cells)
 
-    def cell_fn(state, item):
+    def cell_fn(const, state, item):
         cache = state["cache"]
         if admissions:
-            adm = state["adm"]
+            adm = const["adm"]
             gates = [
                 (adm["step"][a] == item["step"]) & (adm["mb"][a] == item["mb"])
                 for a in range(admissions)
@@ -661,6 +740,10 @@ def make_decode_cell(
             # cell); everything else skips the install entirely.
             cache = lax.cond(any_hit, _install_all, lambda c: c, cache)
         mb0 = item["mb"] * microbatch
+        batch_idx = mb0 + jnp.arange(microbatch)
+        # Pure read: the attention operand.  The write path is the
+        # row-level scatter below — nothing slab-sized rides the group
+        # scan's ys or the state write-back.
         cache_mb = jax.tree.map(
             lambda c: lax.dynamic_slice_in_dim(c, mb0, microbatch, axis=1),
             cache,
@@ -671,25 +754,18 @@ def make_decode_cell(
 
         def group_fn(x, scan_in):
             group_params, group_cache = scan_in
-            x, new_cache, _ = _apply_group(
+            x, step_rows, _ = _apply_group(
                 group_params, x, cfg, plans,
                 positions=positions, group_cache=group_cache,
                 cache_pos=lengths, kv_len=kv_len,
                 attn_impl=attn_impl, kv_chunk=kv_chunk, q_chunk=1,
+                cache_rows=True,
             )
-            return x, new_cache
+            return x, step_rows
 
-        blocks = jax.tree.map(
-            lambda p: lax.dynamic_index_in_dim(p, state["idx"], keepdims=False),
-            cell_blocks,
-        )
-        x, new_mb = lax.scan(group_fn, item["x"], (blocks, cache_mb))
-        cache = jax.tree.map(
-            lambda full, mb: lax.dynamic_update_slice_in_dim(
-                full, mb, mb0, axis=1
-            ),
-            cache,
-            new_mb,
+        x, rows = lax.scan(group_fn, item["x"], (const["blocks"], cache_mb))
+        cache = scatter_decode_rows(
+            cache, rows, plans, mb0=mb0, batch_idx=batch_idx, pos=lengths
         )
         return {**state, "cache": cache}, {**item, "x": x}
 

@@ -240,3 +240,98 @@ def analyze_hlo(text: str) -> dict[str, Any]:
             for b, k, s, m, o in top[:12]
         ],
     }
+
+
+# ---------------------------------------------------------------------------
+# Conditional-region isolation (the emit-split HLO assertion)
+# ---------------------------------------------------------------------------
+
+# Computation-reference attributes and whether following them crosses
+# into a conditional's branch (the "guarded" edges).  An SPMD program is
+# one module for every device; what distinguishes "device d never runs
+# the LM head" is that the head ops live only inside conditional branch
+# computations whose predicate (a plan column) is false on device d.
+_CALL_ATTRS = (
+    ("to_apply=%?([\\w.\\-]+)", False),
+    ("body=%?([\\w.\\-]+)", False),
+    ("condition=%?([\\w.\\-]+)", False),
+    # Fusions reference their body as calls=%fused_computation (the
+    # textual form XLA emits); missing this edge would leave fusion
+    # bodies unreachable and silently classify fused ops as guarded.
+    ("calls=\\{([^}]*)\\}", False),
+    ("calls=%?([\\w.\\-]+)", False),
+    ("called_computations=\\{([^}]*)\\}", False),
+    ("true_computation=%?([\\w.\\-]+)", True),
+    ("false_computation=%?([\\w.\\-]+)", True),
+    ("branch_computations=\\{([^}]*)\\}", True),
+)
+
+
+def _call_edges(instrs):
+    """Yield (callee, guarded) for every computation reference."""
+    for ins in instrs:
+        for pattern, guarded in _CALL_ATTRS:
+            for m in re.finditer(pattern, ins.attrs):
+                for name in re.findall(r"%?([\w.\-]+)", m.group(1)):
+                    yield name, guarded
+
+
+def unguarded_matches(text: str, match) -> tuple[int, int]:
+    """Count instructions satisfying ``match(Instr)`` in the module, and
+    how many of those sit in a computation reachable from the entry
+    *without* crossing into a conditional branch.
+
+    Returns ``(total, unguarded)``.  ``unguarded == 0`` with ``total >
+    0`` means every matching op is region-isolated behind a conditional
+    — combined with a plan whose gating column is zero on a device, that
+    device's executed tick body never contains the op.
+    """
+    comps, entry = parse_module(text)
+    edges: dict[str, list[tuple[str, bool]]] = {}
+    for name, instrs in comps.items():
+        edges[name] = list(_call_edges(instrs))
+    # BFS over non-guarded edges only.
+    unguarded_comps: set[str] = set()
+    frontier = [entry] if entry else []
+    while frontier:
+        name = frontier.pop()
+        if name in unguarded_comps or name not in comps:
+            continue
+        unguarded_comps.add(name)
+        for callee, guarded in edges.get(name, ()):
+            if not guarded:
+                frontier.append(callee)
+    total = unguarded = 0
+    for name, instrs in comps.items():
+        for ins in instrs:
+            if not match(ins):
+                continue
+            total += 1
+            if name in unguarded_comps:
+                unguarded += 1
+    return total, unguarded
+
+
+def head_matmul_conditional_only(text: str, logits_width: int) -> bool:
+    """True iff the module contains at least one logits-width matmul and
+    every one of them is conditional-guarded (see
+    :func:`unguarded_matches`).  The serving emit-split acceptance
+    check: with the plan's ``emit`` column nonzero only on the final
+    pipeline device, a guarded head matmul is structurally absent from
+    every other device's executed tick body."""
+
+    def is_head_dot(ins) -> bool:
+        if ins.opcode not in ("dot", "custom-call"):
+            return False
+        if ins.opcode == "custom-call" and "matmul" not in ins.attrs.lower():
+            return False
+        dims = [
+            int(d)
+            for _, ds in _SHAPE_RE.findall(ins.shape)
+            if ds
+            for d in ds.split(",")
+        ]
+        return logits_width in dims
+
+    total, unguarded = unguarded_matches(text, is_head_dot)
+    return total > 0 and unguarded == 0

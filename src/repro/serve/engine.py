@@ -14,8 +14,9 @@ outputs:
 sampling and retirement run in host Python between steps.
 
 ``StreamEngine`` — decode as a Stream program.  The transformer's layer
-groups split into ``num_cells`` pipeline cells (each owning its params
-and cache shard as mutable per-cell Stream state), the batch splits into
+groups split into ``num_cells`` pipeline cells (params ride the chain's
+read-only ``const_state``; each cell's cache shard is its mutable
+Stream state, updated by row-level scatters only), the batch splits into
 ``microbatches`` in-flight items, and one ``Stream.feedback`` program
 executes ``round_steps`` decode steps per device-program invocation:
 the emitted token re-enters as the next item (lag = microbatches), and a
@@ -304,6 +305,83 @@ class Engine(_EngineBase):
         return finished
 
 
+def decode_copy_bytes_per_tick(
+    cfg: ArchConfig,
+    microbatch: int,
+    num_cells: int,
+    *,
+    row_scatter: bool = True,
+    max_len: int = 1024,
+) -> int:
+    """Bytes one steady decode tick writes into its cell's cache shard.
+
+    Under the row-scatter update scheme (the shipped hot path) a tick
+    writes exactly one cache row per sequence per layer — the
+    ``max_len=1`` cache layout *is* that row set, so its byte count over
+    ``num_cells`` is the per-tick traffic.  Cross-attention vision K/V
+    never changes during decode (``scatter_decode_rows`` skips it), so
+    its leaves are excluded from the row set.  ``row_scatter=False``
+    models the slab scheme this replaced (slice-out/slice-in of the
+    whole microbatch block, vision K/V included — the old path rewrote
+    it): the attention/SSM leaves at full ``max_len`` — a ``max_len``×
+    larger term.  Feed the result through
+    :func:`repro.core.chunking.copy_time_per_tick` into
+    :func:`repro.core.chunking.optimal_schedule`'s ``per_tick_copy``.
+    """
+    layout = T.cache_layout(cfg, microbatch, 1 if row_scatter else max_len)
+    if row_scatter:
+        plans = T.block_plans(cfg)
+        layout = {
+            key: blk
+            for key, blk in layout.items()
+            if plans[int(key.removeprefix("block"))].mixer != "cross_attn"
+        }
+    total = sum(
+        int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+        for leaf in jax.tree.leaves(layout)
+    )
+    return total // num_cells
+
+
+def suggest_decode_pipeline(
+    cfg: ArchConfig,
+    *,
+    devices: int,
+    work_per_item: float,
+    per_tick_overhead: float,
+    microbatch: int,
+    num_cells: int,
+    copy_bytes_per_second: float = 50e9,
+    max_len: int = 1024,
+    row_scatter: bool = True,
+    max_chunks: int = 64,
+):
+    """Pick a decode (schedule, M, V) with the cache-traffic term included.
+
+    Thin serving-side threading of the chunking cost model: converts the
+    per-tick copy bytes of the decode cells (row-scatter or slab) into a
+    time term and hands it to
+    :func:`repro.core.chunking.optimal_schedule`.  Returns a
+    :class:`repro.core.chunking.ScheduleChoice`.
+    """
+    from repro.core import chunking
+
+    per_tick_copy = chunking.copy_time_per_tick(
+        decode_copy_bytes_per_tick(
+            cfg, microbatch, num_cells,
+            row_scatter=row_scatter, max_len=max_len,
+        ),
+        copy_bytes_per_second,
+    )
+    return chunking.optimal_schedule(
+        work_per_item,
+        devices,
+        per_tick_overhead,
+        max_chunks=max_chunks,
+        per_tick_copy=per_tick_copy,
+    )
+
+
 def _overlay_combine(flow, src):
     """Entry-zip admission overlay: where ``gate`` is set, the slot's
     row is replaced wholesale by the admitted request's state (its
@@ -372,13 +450,15 @@ class StreamEngine(_EngineBase):
                 schedule=pcfg.schedule,
                 interleave=pcfg.interleave,
             )
-        self.cell_states = T.split_decode_cells(
+        # Read-only/mutable split: layer params ride the Stream's
+        # const_state (scan xs, stage-sharded, never written back); the
+        # per-cell cache shard is the only mutable state.
+        self.cell_consts, self.cell_states = T.split_decode_cells(
             params, T.init_cache(cfg, scfg.max_batch, scfg.max_len),
             pcfg.num_cells,
         )
         self._cell_fn = T.make_decode_cell(
             cfg,
-            params,
             num_cells=pcfg.num_cells,
             microbatch=self.mb_size,
             attn_impl=scfg.attn_impl,
@@ -400,16 +480,23 @@ class StreamEngine(_EngineBase):
 
         t_, m_ = pcfg.round_steps, pcfg.microbatches
 
-        def _round(cell_states, init_items, overlay_items):
+        def _round(cell_consts, cell_states, init_items, overlay_items):
             program = (
                 Stream.feedback(init_items, t_ * m_, self._emit)
                 .zip(Stream.source(overlay_items), _overlay_combine)
-                .through(self._cell_fn, cell_states)
+                .through(
+                    self._cell_fn, cell_states, const_state=cell_consts
+                )
             )
             res = program.collect(self.evaluator)
             return res.states[0], res.items
 
-        self._round = jax.jit(_round)
+        # Donate the mutable cell states (the KV cache): the round's
+        # output caches reuse the input buffers in place — the hot loop
+        # allocates no second cache.  (CPU ignores donation; skip the
+        # per-call warning there.)
+        donate = (1,) if jax.default_backend() != "cpu" else ()
+        self._round = jax.jit(_round, donate_argnums=donate)
 
     @property
     def cache(self) -> PyTree:
@@ -551,13 +638,14 @@ class StreamEngine(_EngineBase):
         if not admissions and all(r is None for r in self.active):
             return finished
         init_items, overlay, adm = self._build_round_inputs(admissions)
+        # The admission payload is read-only within a round, so it rides
+        # const_state — it never enters the mutable carry, and nothing
+        # needs dropping afterwards (const state is not returned).
         new_states, collected = self._round(
-            {**self.cell_states, "adm": adm}, init_items, overlay
+            {**self.cell_consts, "adm": adm},
+            self.cell_states, init_items, overlay,
         )
-        # Drop the round's admission payload: keeping it in cell_states
-        # would pin admit_per_round full-length single-request caches as
-        # dead device memory between rounds.
-        self.cell_states = {k: v for k, v in new_states.items() if k != "adm"}
+        self.cell_states = new_states
         col = {
             k: np.asarray(collected[k])
             for k in ("tok", "pos", "active", "uid", "ngen")

@@ -259,6 +259,33 @@ for lag, n in [(8, 24), (4, 16), (3, 14)]:
                    zip(jax.tree.leaves(rfl.states), jax.tree.leaves(rff.states)))
 print("FEEDBACK_ZOO", okf)
 
+# 5c3. the read-only/mutable state split: const_state rides scan xs only
+# (stage-sharded, never carried, never written back) — bitwise Lazy ==
+# Future across the zoo for plain AND feedback chains, mutable and not
+ccell = lambda c, s, x: (s + 1.0, jnp.tanh(x * c) + s * 0.01)
+cst = jnp.linspace(1.0, 2.0, 8)
+cw = jnp.arange(8, dtype=jnp.float32)
+okc = True
+mkc = lambda: Stream.source(a7).through(ccell, cw, const_state=cst)
+rcl = mkc().collect(LazyEvaluator())
+fbc_init = jnp.linspace(0., 1., 12).reshape(4, 3)
+mkcf = lambda: Stream.feedback(fbc_init, 16, fbemit).through(
+    ccell, cw, const_state=cst)
+rcl2 = mkcf().collect(LazyEvaluator())
+for name, v in ZOO:
+    ev = FutureEvaluator(mesh, "pod", schedule=name, interleave=v)
+    rcf = mkc().collect(ev)
+    okc &= all(bool(jnp.all(x == y)) for x, y in
+               zip(jax.tree.leaves(rcl.items), jax.tree.leaves(rcf.items)))
+    okc &= all(bool(jnp.all(x == y)) for x, y in
+               zip(jax.tree.leaves(rcl.states), jax.tree.leaves(rcf.states)))
+    rcf2 = mkcf().collect(ev)
+    okc &= all(bool(jnp.all(x == y)) for x, y in
+               zip(jax.tree.leaves(rcl2.items), jax.tree.leaves(rcf2.items)))
+    okc &= all(bool(jnp.all(x == y)) for x, y in
+               zip(jax.tree.leaves(rcl2.states), jax.tree.leaves(rcf2.states)))
+print("CONST_ZOO", okc)
+
 # 5d. fused multiply-add x*y + z rides the accumulator source
 z7 = poly.from_dict({(1, 2, 3): 7, (0, 0, 1): 5}, 8, 6)
 fma = poly.to_dict(poly.times_into(x7, x7, z7, evaluator=fut, num_x_chunks=4,
@@ -372,6 +399,10 @@ def test_polynomial_two_source_zip_across_schedules(report):
 
 def test_feedback_unfold_across_schedules(report):
     assert report["FEEDBACK_ZOO"].startswith("True")
+
+
+def test_const_state_split_across_schedules(report):
+    assert report["CONST_ZOO"].startswith("True")
 
 
 def test_polynomial_zip_sources_not_replicated(report):

@@ -68,6 +68,28 @@ rt = [eng_t.submit(p, b) for p, b in zip(prompts[:10], budgets[:10])]
 eng_t.run_until_drained()
 print("SERVE_TEMPERATURE", all(
     a.out_tokens == b.out_tokens for a, b in zip(rt_ref, rt)))
+
+# emit split: the round program's only logits-width matmul must live
+# behind the plan-keyed emit conditional (region isolation in the SPMD
+# module), and the plan's emit column must be zero on every non-final
+# device — together: no non-final device's executed tick body contains
+# the LM head.
+from repro.roofline.hlo_parse import head_matmul_conditional_only
+for sched, v, cells, m in [("gpipe", 1, 8, 8), ("interleaved", 2, 8, 4)]:
+    pcfg_h = DecodePipelineConfig(num_cells=cells, microbatches=m,
+                                  schedule=sched, interleave=v,
+                                  round_steps=4, admit_per_round=4)
+    eng_h = StreamEngine(params, sc, scfg, pcfg_h, mesh=mesh)
+    adm_h, _ = eng_h._plan_admissions(pcfg_h.round_steps)
+    ii, ov, ap = eng_h._build_round_inputs(adm_h)
+    txt = eng_h._round.lower(
+        {**eng_h.cell_consts, "adm": ap}, eng_h.cell_states, ii, ov
+    ).compile().as_text()
+    guarded = head_matmul_conditional_only(txt, sc.vocab_size)
+    plan = eng_h.evaluator.plan_for(
+        pcfg_h.round_steps * m, (0, 0), feedback_lag=m)
+    last_only = bool((plan.emit[:, :3] == 0).all()) and int(plan.emit.sum()) > 0
+    print(f"EMIT_SPLIT_{sched.upper()}", guarded and last_only)
 """
 
 
@@ -96,3 +118,13 @@ def test_pipelined_interleaved_bit_identical(report):
 
 def test_pipelined_temperature_sampling_identical(report):
     assert report["SERVE_TEMPERATURE"].startswith("True")
+
+
+def test_emit_split_head_matmul_last_stage_only_gpipe(report):
+    # acceptance: the LM head is conditional-guarded in the compiled
+    # round HLO and the plan's emit column fires only on device D-1
+    assert report["EMIT_SPLIT_GPIPE"].startswith("True")
+
+
+def test_emit_split_head_matmul_last_stage_only_interleaved(report):
+    assert report["EMIT_SPLIT_INTERLEAVED"].startswith("True")

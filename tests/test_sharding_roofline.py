@@ -143,6 +143,63 @@ class TestHloParse:
         assert out["num_loops"] >= 0  # parses without error
 
 
+class TestConditionalGuard:
+    """The emit-split checker must be *sound*: an unconditional head
+    matmul may never count as guarded — including when XLA fuses it
+    (fusion bodies are referenced via ``calls=``, which the unguarded
+    BFS must traverse)."""
+
+    V = 2048
+
+    def _w(self):
+        import jax.numpy as jnp
+
+        return jnp.zeros((64, self.V), jnp.float32)
+
+    def test_unconditional_fused_head_is_flagged(self):
+        import jax.numpy as jnp
+
+        from repro.roofline.hlo_parse import head_matmul_conditional_only
+
+        w = self._w()
+        # + bias so the dot fuses on CPU: the checker must still see it
+        f = jax.jit(lambda x: jnp.tanh(x @ w + 1.0))
+        hlo = f.lower(jnp.zeros((4, 64), jnp.float32)).compile().as_text()
+        assert "calls=" in hlo  # the fusion edge this test pins
+        assert head_matmul_conditional_only(hlo, self.V) is False
+
+    def test_cond_guarded_head_passes(self):
+        import jax.numpy as jnp
+        from jax import lax
+
+        from repro.roofline.hlo_parse import head_matmul_conditional_only
+
+        w = self._w()
+        g = jax.jit(
+            lambda p, x: lax.cond(
+                p > 0,
+                lambda y: jnp.tanh(y @ w + 1.0),
+                lambda y: jnp.zeros((4, self.V)),
+                x,
+            )
+        )
+        hlo = g.lower(
+            jnp.int32(0), jnp.zeros((4, 64), jnp.float32)
+        ).compile().as_text()
+        assert head_matmul_conditional_only(hlo, self.V) is True
+
+    def test_no_head_at_all_is_not_a_pass(self):
+        import jax.numpy as jnp
+
+        from repro.roofline.hlo_parse import head_matmul_conditional_only
+
+        f = jax.jit(lambda x: x * 2.0)
+        hlo = f.lower(jnp.zeros((4, 64), jnp.float32)).compile().as_text()
+        # total == 0 must fail: "no matmul found" is a broken probe,
+        # not a guarded one
+        assert head_matmul_conditional_only(hlo, self.V) is False
+
+
 class TestAnalyticFlops:
     def test_dense_matches_hand_count(self):
         from repro.configs.base import ArchConfig, ShapeCell

@@ -154,7 +154,8 @@ class TestZipDeterminism:
         uni = G.unify_segments(chain.segments)
         row0 = jax.tree.map(lambda l: l[0], uni.init_state)
         with pytest.raises(ValueError, match="LazyEvaluator"):
-            uni.cell_fn(row0, _items()[0])
+            # canonical 3-arg cell: const row (None here), state row, item
+            uni.cell_fn(None, row0, _items()[0])
 
     def test_zip_of_stateful_pipelines_runs_lazy_but_not_chain(self):
         w = jnp.arange(2, dtype=jnp.int32)
@@ -491,6 +492,117 @@ class TestLowering:
         )
 
 
+class TestConstState:
+    """The read-only/mutable state split: ``through(..., const_state=...)``.
+
+    Const leaves ride scan xs only — same values as folding them into
+    the mutable state, minus the per-tick write-back (and minus an entry
+    in the returned final states).  Lazy-side laws here; the Lazy ≡
+    Future bit-equality across the schedule zoo (including feedback
+    chains) runs in the multidevice battery.
+    """
+
+    @staticmethod
+    def _const_cell(const, state, item):
+        return state + 1, jnp.tanh(item * const) + state * 0.01
+
+    @staticmethod
+    def _folded_cell(state, item):
+        new = {"count": state["count"] + 1, "scale": state["scale"]}
+        return new, jnp.tanh(item * state["scale"]) + state["count"] * 0.01
+
+    def _w(self, n=4):
+        return jnp.arange(n, dtype=jnp.float32)
+
+    def _scale(self, n=4):
+        return jnp.linspace(1.0, 2.0, n)
+
+    def test_const_equals_folded_state(self):
+        items = _items()
+        a = (
+            Stream.source(items)
+            .through(self._const_cell, self._w(), const_state=self._scale())
+            .collect()
+        )
+        b = (
+            Stream.source(items)
+            .through(
+                self._folded_cell,
+                {"count": self._w(), "scale": self._scale()},
+            )
+            .collect()
+        )
+        np.testing.assert_array_equal(np.asarray(a.items), np.asarray(b.items))
+        # final states cover the mutable half only
+        np.testing.assert_array_equal(
+            np.asarray(a.states[0]), np.asarray(b.states[0]["count"])
+        )
+
+    def test_const_leading_axis_validated(self):
+        with pytest.raises(ValueError, match="const_state"):
+            Stream.source(_items()).through(
+                self._const_cell, self._w(4), const_state=self._scale(3)
+            )
+
+    def test_const_under_feedback(self):
+        emit = lambda x: x * 0.9 + 0.1
+        init = _items(3)
+        a = (
+            Stream.feedback(init, 11, emit)
+            .through(self._const_cell, self._w(), const_state=self._scale())
+            .collect()
+        )
+        b = (
+            Stream.feedback(init, 11, emit)
+            .through(
+                self._folded_cell,
+                {"count": self._w(), "scale": self._scale()},
+            )
+            .collect()
+        )
+        np.testing.assert_array_equal(np.asarray(a.items), np.asarray(b.items))
+
+    def test_const_multi_segment_with_mid_map(self):
+        """Unified multi-segment machinery: a const segment composed with
+        a const-free one through a fused mid-spine map (the pre_fn path),
+        against the same program with const folded into mutable state."""
+        items = _items()
+        plain = lambda s, x: (s, jnp.tanh(x * s))
+        w2 = jnp.linspace(0.5, 1.5, 3)
+        a = (
+            Stream.source(items)
+            .through(self._const_cell, self._w(), const_state=self._scale())
+            .map(lambda x: x * 0.5)
+            .through(plain, w2, mutable_state=False)
+            .collect()
+        )
+        b = (
+            Stream.source(items)
+            .through(
+                self._folded_cell,
+                {"count": self._w(), "scale": self._scale()},
+            )
+            .map(lambda x: x * 0.5)
+            .through(plain, w2, mutable_state=False)
+            .collect()
+        )
+        np.testing.assert_array_equal(np.asarray(a.items), np.asarray(b.items))
+        assert len(a.states) == 2
+
+    def test_const_never_returned_or_mutated(self):
+        """A cell trying to 'write' const has nowhere to put it: the
+        returned state structure is the mutable half, and collect's
+        states match it."""
+        items = _items()
+        res = (
+            Stream.source(items)
+            .through(self._const_cell, self._w(), const_state=self._scale())
+            .collect()
+        )
+        assert len(res.states) == 1
+        assert np.asarray(res.states[0]).shape == (4,)
+
+
 class TestBenchCheckGate:
     """Satellite: the --check regression gate's pure diff logic."""
 
@@ -531,3 +643,34 @@ class TestBenchCheckGate:
         base = [self._rec(seconds=1.0)]
         fresh = [dict(self._rec(seconds=9.0), dim=512)]
         assert check_regressions(base, fresh, 0.10) == []
+
+    def test_missing_baseline_message_not_keyerror(self, tmp_path, capsys):
+        from benchmarks.run import _load_baseline
+
+        assert _load_baseline("serve", str(tmp_path / "nope.json")) is None
+        err = capsys.readouterr().err
+        assert "--suite serve" in err and "no baseline" in err
+
+    def test_baseline_without_sweep_key_is_explained(self, tmp_path, capsys):
+        import json as _json
+
+        from benchmarks.run import _load_baseline
+
+        p = tmp_path / "BENCH_serve.json"
+        p.write_text(_json.dumps({"rows": []}))
+        assert _load_baseline("serve", str(p)) is None
+        assert "'sweep'" in capsys.readouterr().err
+
+    def test_corrupt_baseline_is_explained(self, tmp_path, capsys):
+        from benchmarks.run import _load_baseline
+
+        p = tmp_path / "BENCH_serve.json"
+        p.write_text("not json")
+        assert _load_baseline("serve", str(p)) is None
+        assert "unreadable" in capsys.readouterr().err
+
+    def test_check_rejects_unknown_suite(self, capsys):
+        from benchmarks.run import run_check
+
+        assert run_check(0.1, False, only="nosuch") == 2
+        assert "no gate for suite" in capsys.readouterr().err
