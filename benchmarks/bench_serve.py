@@ -49,14 +49,27 @@ import json
 
 from benchmarks._util import csv_row, run_with_devices
 
-# (label, schedule, devices, interleave); stream_lazy is the
+# (label, schedule, devices, interleave, kernels); stream_lazy is the
 # layer-sequential baseline the pipelined schedules are gated against.
+# stream_lazy_pallas runs the same round program with the fused
+# decode-attention + emit kernels — on CPU the Pallas interpreter
+# emulates them (a while loop per grid point), so its tokens/sec is a
+# correctness-under-load cell, not the fusion win; the roofline
+# prediction recorded next to it is what the fusion buys on real HBM.
 ENGINES = [
-    ("sequential", "-", 1, 1),
-    ("stream_lazy", "lazy", 1, 1),
-    ("stream_gpipe", "gpipe", 2, 1),
-    ("stream_interleaved", "interleaved", 2, 2),
+    ("sequential", "-", 1, 1, "xla"),
+    ("stream_lazy", "lazy", 1, 1, "xla"),
+    ("stream_lazy_pallas", "lazy", 1, 1, "pallas"),
+    ("stream_gpipe", "gpipe", 2, 1, "xla"),
+    ("stream_interleaved", "interleaved", 2, 2, "xla"),
 ]
+
+# Container-class roofline constants for the predicted-tick record
+# (directional: the achieved/predicted ratio is tracked, not the
+# absolute).  ~2 CPU cores of f32 FMA and dual-channel DDR-class
+# bandwidth; on TPU the same prediction uses the chip's specs.
+CPU_PEAK_FLOPS = 5e10
+CPU_HBM_BPS = 2e10
 
 SCRIPT = """
 import json, time, jax, jax.numpy as jnp, numpy as np
@@ -79,13 +92,14 @@ mesh = compat.make_mesh((2,), ("pod",), devices=jax.devices()[:2])
 scfg = ServeConfig(max_batch=BATCH, max_len=64, prefill_chunk=CHUNK,
                    max_new_tokens=MAX_NEW)
 
-def build(label, schedule, devices, interleave):
+def build(label, schedule, devices, interleave, kernels):
     if label == "sequential":
         return Engine(params, cfg, scfg)
     pcfg = DecodePipelineConfig(
         num_cells=LAYERS, microbatches=MICRO,
         schedule=schedule if schedule != "lazy" else "gpipe",
-        interleave=interleave, round_steps=ROUND, admit_per_round=4)
+        interleave=interleave, round_steps=ROUND, admit_per_round=4,
+        kernels=kernels)
     m = None if schedule == "lazy" else mesh
     return StreamEngine(params, cfg, scfg, pcfg, mesh=m)
 
@@ -93,7 +107,8 @@ def workload(rng):
     return [rng.integers(1, cfg.vocab_size, size=PLEN) for _ in range(REQUESTS)]
 
 results = {{}}
-engines = {{label: build(label, s, d, v) for label, s, d, v in {engines!r}}}
+engines = {{label: build(label, s, d, v, kern)
+           for label, s, d, v, kern in {engines!r}}}
 # warmup: compile every engine's hot path on a small drain
 for label, eng in engines.items():
     for p in workload(np.random.default_rng(1))[: BATCH]:
@@ -151,6 +166,30 @@ print("TAIL", min(times_p), min(times_t))
 """
 
 
+def _predicted_ticks(dim: int, layers: int, batch: int) -> dict:
+    """Roofline decode-tick predictions for the bench model, per kernel
+    mode — recorded so BENCH_serve.json carries achieved-vs-predicted.
+    Returns {} when repro isn't importable (standalone benchmark run)."""
+    try:
+        from repro.configs.registry import get_config, smoke_config
+        from repro.roofline.analytic import predicted_tick_seconds
+    except ImportError:
+        return {}
+    cfg = smoke_config(get_config("olmo-1b")).with_overrides(num_layers=layers)
+    if dim:
+        cfg = cfg.with_overrides(d_model=dim, d_ff=2 * dim, num_heads=8,
+                                 head_dim=dim // 8, num_kv_heads=2,
+                                 vocab_size=2048)
+    return {
+        mode: predicted_tick_seconds(
+            cfg, batch=batch, kv_len=64,
+            peak_flops_per_second=CPU_PEAK_FLOPS,
+            hbm_bytes_per_second=CPU_HBM_BPS, mode=mode,
+        )["total"]
+        for mode in ("xla", "pallas")
+    }
+
+
 def run(quick: bool = True):
     rows, records = [], []
     # dim=0 keeps the smoke model's 64-dim blocks — the regime where the
@@ -189,20 +228,27 @@ def run(quick: bool = True):
         if "stream_lazy" in per_engine:
             w, _, tot = per_engine["stream_lazy"]
             lazy_tps = tot / w
-        for label, schedule, ndev, interleave in ENGINES:
+        predicted = _predicted_ticks(dim, layers, batch)
+        for label, schedule, ndev, interleave, kern in ENGINES:
             wall, ttft, total = per_engine[label]
             tps = total / wall
+            # one "tick" = one decode step across the full batch; the
+            # drain produces total tokens over batch-wide steps
+            achieved_tick = wall * batch / total
+            pred = predicted.get(kern)
             vs = (
                 f",vs_lazy={tps / lazy_tps:.2f}x"
                 if lazy_tps and label.startswith("stream_") and label != "stream_lazy"
                 else ""
             )
+            if pred:
+                vs += f",roofline_tick_ms={pred*1e3:.2f}"
             rows.append(
                 csv_row(
                     f"serve_{label}_b{batch}",
                     wall,
                     f"tok_per_s={tps:.1f},ttft_ms={ttft*1e3:.1f},"
-                    f"devices={ndev}"
+                    f"devices={ndev},kernels={kern}"
                     + (f",V={interleave}" if interleave > 1 else "")
                     + vs,
                 )
@@ -213,6 +259,7 @@ def run(quick: bool = True):
                     "schedule": schedule,
                     "devices": ndev,
                     "interleave": interleave,
+                    "kernels": kern,
                     "batch": batch,
                     "requests": 2 * batch,
                     "max_new": 24 if quick else 32,
@@ -227,6 +274,11 @@ def run(quick: bool = True):
                         tps / lazy_tps if lazy_tps else None
                     ),
                     "wall_seconds": wall,
+                    "achieved_tick_seconds": achieved_tick,
+                    "predicted_tick_seconds": pred,
+                    "tick_vs_roofline": (
+                        achieved_tick / pred if pred else None
+                    ),
                 }
             )
         if tail is not None:

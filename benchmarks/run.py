@@ -127,12 +127,15 @@ def check_regressions(
 
 
 def _serve_cell_key(record: dict) -> tuple:
-    """Identity of one serve sweep cell."""
+    """Identity of one serve sweep cell.  ``kernels`` defaults to "xla"
+    so baselines written before the kernel-dispatch axis existed keep
+    gating the xla cells."""
     return (
         record.get("engine"),
         record.get("schedule"),
         record.get("devices"),
         record.get("interleave"),
+        record.get("kernels", "xla"),
         record.get("batch"),
         record.get("dim"),
         record.get("max_new"),
@@ -384,8 +387,20 @@ def main() -> None:
 def _write_baseline(path: str, records: list) -> None:
     if not records:
         return
+    payload = {"sweep": records}
+    try:
+        import subprocess
+
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=_ROOT, timeout=10, stdin=subprocess.DEVNULL,
+        )
+        if sha.returncode == 0:
+            payload["git_sha"] = sha.stdout.strip()
+    except OSError:
+        pass  # not a git checkout / git unavailable: baseline still valid
     with open(path, "w") as f:
-        json.dump({"sweep": records}, f, indent=2)
+        json.dump(payload, f, indent=2)
     print(f"# wrote {path}", file=sys.stderr)
 
 

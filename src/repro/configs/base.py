@@ -67,6 +67,10 @@ class ArchConfig:
     tie_embeddings: bool = False
     dtype: Any = jnp.bfloat16
     norm_eps: float = 1e-5
+    # per-op implementation dispatch (repro.kernels.get_impl): "xla" runs
+    # the pure-jnp paths, "pallas" the fused kernels (interpret-emulated
+    # off-TPU), "auto" picks pallas on TPU and xla elsewhere.
+    kernels: str = "xla"
     # sub-quadratic attention available => long_500k applicable
     notes: str = ""
 
@@ -111,6 +115,9 @@ class DecodePipelineConfig:
     round_steps: int = 8      # decode steps per device-program invocation
     admit_per_round: int = 4  # in-plan admission buffer depth
     axis_name: str = "pod"    # mesh axis the cells shard over
+    # kernel dispatch override for the decode hot path; None inherits the
+    # model's ArchConfig.kernels knob.
+    kernels: str | None = None
 
 
 @dataclasses.dataclass(frozen=True)

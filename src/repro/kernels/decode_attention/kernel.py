@@ -1,0 +1,106 @@
+"""Fused decode-attention Pallas kernel: KV row scatter + single-row read.
+
+One decode tick's attention against the cache is, unfused, three HLO
+ops per layer: scatter K row into the slab, scatter V row, dense
+attention over both updated slabs — the scatters materialize two full
+``(B, S, KV, dh)`` copies in HBM whose only consumer is the very next
+dot.  This kernel consumes the *pre-update* cache pages plus the new
+rows and emits the attention output directly: the updated slab exists
+only as a VMEM value (``jnp.where`` against a row iota), never in HBM.
+The caller still owns the durable row-level cache write
+(:func:`repro.models.transformer.scatter_decode_rows` on the tick
+carry) — that write is the row itself, not a slab.
+
+Math replicates :func:`repro.models.layers.attention_dense` op for op
+(fp32 scores, post-matmul scale, ``-inf`` prefix mask, ``jax.nn.softmax``,
+NaN scrub, fp32 V matmul, cast back) so outputs are **bitwise** equal to
+the unfused path — the serving parity batteries assert exactly that.
+
+Grid is one program per batch row; ``pos``/``kv_len`` ride scalar
+prefetch (SMEM) since they index nothing in the block maps but gate the
+in-VMEM row substitution and the mask.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _decode_attention_kernel(
+    pos_ref, len_ref,            # scalar prefetch: (B,) int32 each
+    q_ref,                       # (1, H, dh)
+    kn_ref, vn_ref,              # (1, KV, dh) — this step's rows
+    kc_ref, vc_ref,              # (1, S, KV, dh) — pre-update cache pages
+    o_ref,                       # (1, H, dh)
+    *,
+    scale: float,
+):
+    bb = pl.program_id(0)
+    pos = pos_ref[bb]
+    klen = len_ref[bb]
+    kc = kc_ref[0]
+    vc = vc_ref[0]
+    s, kv, dh = kc.shape
+    h = q_ref.shape[1]
+    g = h // kv
+    # The "scatter" half: substitute the new row at ``pos`` in VMEM only.
+    row = lax.broadcasted_iota(jnp.int32, (s, 1, 1), 0)
+    k = jnp.where(row == pos, kn_ref[0][None], kc)
+    v = jnp.where(row == pos, vn_ref[0][None], vc)
+    # The "read" half: attention_dense's exact sequence for Sq=1.
+    qg = q_ref[0].reshape(kv, g, dh)
+    scores = jnp.einsum(
+        "kgd,skd->kgs", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    kmask = lax.broadcasted_iota(jnp.int32, (1, 1, s), 2) < klen
+    scores = jnp.where(kmask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)
+    out = jnp.einsum("kgs,skd->kgd", probs, v.astype(jnp.float32))
+    o_ref[0] = out.reshape(h, dh).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("softmax_scale", "interpret")
+)
+def decode_attention_pallas(
+    q: jnp.ndarray,        # (B, H, dh)
+    k_new: jnp.ndarray,    # (B, KV, dh)
+    v_new: jnp.ndarray,    # (B, KV, dh)
+    k_cache: jnp.ndarray,  # (B, S, KV, dh)
+    v_cache: jnp.ndarray,  # (B, S, KV, dh)
+    pos: jnp.ndarray,      # (B,) int32
+    kv_len: jnp.ndarray,   # (B,) int32
+    *,
+    softmax_scale: float | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, h, dh = q.shape
+    s, kv = k_cache.shape[1], k_cache.shape[2]
+    scale = softmax_scale or dh**-0.5
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, h, dh), lambda bb, p_, l_: (bb, 0, 0)),
+            pl.BlockSpec((1, kv, dh), lambda bb, p_, l_: (bb, 0, 0)),
+            pl.BlockSpec((1, kv, dh), lambda bb, p_, l_: (bb, 0, 0)),
+            pl.BlockSpec((1, s, kv, dh), lambda bb, p_, l_: (bb, 0, 0, 0)),
+            pl.BlockSpec((1, s, kv, dh), lambda bb, p_, l_: (bb, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, dh), lambda bb, p_, l_: (bb, 0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_decode_attention_kernel, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), q.dtype),
+        interpret=interpret,
+    )(
+        pos.astype(jnp.int32), kv_len.astype(jnp.int32),
+        q, k_new, v_new, k_cache, v_cache,
+    )

@@ -1,0 +1,42 @@
+"""Jit'd public wrapper for the emit-epilogue fusion.
+
+The ``pallas_emit_norm_logits`` name scope is the structural marker
+``roofline.hlo_parse.fused_region_present`` asserts on in compiled
+round HLO — it survives into op_name metadata even under the Pallas
+interpreter, where no custom-call exists to look for.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.emit_norm_logits.kernel import emit_norm_logits_pallas
+
+FUSION_SCOPE = "pallas_emit_norm_logits"
+
+
+def emit_norm_logits(
+    x: jnp.ndarray,  # (B, 1, d)
+    w: jnp.ndarray,  # (d, V) untied head | (V, d) tied embedding
+    *,
+    norm: str,
+    scale=None,
+    eps: float = 1e-5,
+    tied: bool = False,
+    block_v: int = 512,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Drop-in for the emit's ``_norm`` + ``layers.logits`` + ``[:, 0, :]``
+    (bitwise equal to ref.py); returns fp32 logits ``(B, V)``."""
+    if interpret is None:
+        interpret = default_interpret()
+    if norm not in ("rmsnorm", "layernorm_nonparam"):
+        raise ValueError(norm)
+    with jax.named_scope(FUSION_SCOPE):
+        return emit_norm_logits_pallas(
+            x[:, 0], w,
+            scale if norm == "rmsnorm" else None,
+            norm=norm, eps=eps, tied=tied, block_v=block_v,
+            interpret=interpret,
+        )

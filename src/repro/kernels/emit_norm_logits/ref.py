@@ -1,0 +1,32 @@
+"""Pure-jnp oracle: the decode emit's final-norm -> logits step, verbatim.
+
+Replicates what ``make_decode_emit`` runs unfused: ``_norm`` (rmsnorm or
+OLMo's non-parametric layernorm) followed by ``layers.logits`` (tied or
+untied head, fp32 cast) and the ``[:, 0, :]`` squeeze.  The fused kernel
+is gated on bitwise equality with this function.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def emit_norm_logits_ref(
+    x: jnp.ndarray,        # (B, 1, d) — the emit's hidden state
+    w: jnp.ndarray,        # (d, V) untied head | (V, d) tied embedding
+    *,
+    norm: str,             # "rmsnorm" | "layernorm_nonparam"
+    scale=None,            # (d,) rmsnorm scale (None for layernorm)
+    eps: float = 1e-5,
+    tied: bool = False,
+    interpret: bool | None = None,  # accepted for signature parity
+) -> jnp.ndarray:
+    from repro.models import layers as L
+
+    if norm == "rmsnorm":
+        xn = L.rmsnorm({"scale": scale}, x, eps)
+    elif norm == "layernorm_nonparam":
+        xn = L.layernorm_nonparam(x, eps)
+    else:
+        raise ValueError(norm)
+    eq = "bsd,vd->bsv" if tied else "bsd,dv->bsv"
+    return jnp.einsum(eq, xn, w).astype(jnp.float32)[:, 0, :]

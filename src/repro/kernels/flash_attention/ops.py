@@ -10,11 +10,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import default_interpret
 from repro.kernels.flash_attention.kernel import flash_attention_bhsd
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def flash_attention(
@@ -31,7 +28,7 @@ def flash_attention(
 ) -> jnp.ndarray:
     """Drop-in for repro.models.layers.attention(impl=...)."""
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = default_interpret()
     qt = jnp.swapaxes(q, 1, 2)  # (B, H, Sq, dh)
     kt = jnp.swapaxes(k, 1, 2)
     vt = jnp.swapaxes(v, 1, 2)

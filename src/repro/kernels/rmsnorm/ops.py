@@ -4,6 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import default_interpret
 from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
 
 
@@ -11,7 +12,7 @@ def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, *, eps: float = 1e-5,
             interpret: bool | None = None) -> jnp.ndarray:
     """Drop-in for repro.models.layers.rmsnorm(params, x)."""
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = default_interpret()
     lead = x.shape[:-1]
     rows = 1
     for s in lead:

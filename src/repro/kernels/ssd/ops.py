@@ -11,7 +11,10 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
 from jax import lax
+
+from repro.kernels import default_interpret
 
 
 def _combine(left, right):
@@ -32,7 +35,7 @@ def ssd_chunked_pallas(
     from repro.kernels.ssd.kernel import ssd_intra_chunk
 
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = default_interpret()
     bsz, s, h, p = x.shape
     g, n = b_mat.shape[2], b_mat.shape[3]
     assert s % chunk == 0

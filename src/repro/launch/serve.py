@@ -53,6 +53,12 @@ def main(argv=None):
     ap.add_argument("--round-steps", type=int, default=8,
                     help="decode steps per device-program invocation")
     ap.add_argument("--admit-per-round", type=int, default=4)
+    ap.add_argument("--kernels", choices=("xla", "pallas", "auto"),
+                    default="xla",
+                    help="decode-path kernel dispatch (repro.kernels): "
+                    "pallas = fused decode-attention + emit epilogue "
+                    "(interpret-emulated off-TPU, bitwise equal); auto = "
+                    "pallas on TPU, xla elsewhere")
     ap.add_argument("--devices", type=int, default=0,
                     help="pipeline devices for --engine stream "
                     "(0 = all; 1 = LazyEvaluator, layer-sequential)")
@@ -83,6 +89,7 @@ def main(argv=None):
         cfg = smoke_config(cfg)
     if args.num_layers:
         cfg = cfg.with_overrides(num_layers=args.num_layers)
+    cfg = cfg.with_overrides(kernels=args.kernels)
     if cfg.embeds_input:
         raise SystemExit("embeds-input archs need the embedding frontend stub; "
                          "use a token arch for the serving example")
@@ -141,7 +148,8 @@ def main(argv=None):
             )
         eng = StreamEngine(params, cfg, scfg, pcfg, mesh=mesh)
         mode = (f"stream/{args.schedule}xV{args.interleave} D={ndev} "
-                f"S={args.cells} M={args.microbatches} T={args.round_steps}")
+                f"S={args.cells} M={args.microbatches} T={args.round_steps} "
+                f"kernels={eng.kernels}")
     else:
         if args.suggest_schedule:
             print(

@@ -47,6 +47,7 @@ def build(args):
         remat=True,
         pipeline_schedule=args.pipeline_schedule,
         pipeline_backward=args.pipeline_backward,
+        kernels=args.kernels,
     )
     ocfg = AdamWConfig(
         learning_rate=args.lr, warmup_steps=args.warmup,
@@ -77,6 +78,12 @@ def main(argv=None):
                     help="backward execution: jax.grad transpose of the "
                          "forward plan, or the combined plan's B units "
                          "through the custom-VJP engine (true 1F1B)")
+    ap.add_argument("--kernels", choices=["xla", "pallas", "auto"],
+                    default="xla",
+                    help="kernel dispatch (repro.kernels). Training "
+                         "requires xla (Pallas kernels have no VJPs); "
+                         "pallas fails fast with a clear error, auto "
+                         "resolves to xla")
     ap.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--checkpoint-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")

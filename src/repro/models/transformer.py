@@ -32,6 +32,7 @@ import numpy as np
 from jax import lax
 
 from repro.configs.base import ArchConfig
+from repro.kernels import get_impl, resolve_mode
 from repro.models import layers as L
 from repro.models import moe as M
 from repro.models import ssm as S
@@ -197,6 +198,16 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> PyTree:
 # ---------------------------------------------------------------------------
 
 
+# Block norms do NOT dispatch on the kernels knob: the XLA path's bf16
+# numerics at a norm -> matmul boundary are fusion-dependent (the
+# f32->bf16->f32 round-trip of the norm output is elided into some
+# consumers, e.g. the SSM in-projection, but not others), so a
+# materialized kernel output cannot be bitwise-stable against it.  The
+# standalone rmsnorm kernel stays in the registry for callers that own
+# their numerics end to end; the decode hot path gets its fusion wins
+# from the decode-attention and emit-epilogue kernels, whose references
+# are fusion-stable (all-f32 attention math / the emit's reshape-
+# separated head matmul).
 def _norm(cfg, params, x):
     if cfg.norm == "rmsnorm":
         return L.rmsnorm(params, x, cfg.norm_eps)
@@ -206,7 +217,7 @@ def _norm(cfg, params, x):
 def _self_attn(
     params, x, cfg, *, positions, cache=None, cache_pos=None, kv_len=None,
     attn_impl="dense", q_chunk=512, kv_chunk=1024, causal_skip=None,
-    collect_rows=False,
+    collect_rows=False, kernels="xla",
 ):
     """Self-attention; with cache: decode/chunked-prefill.
 
@@ -220,11 +231,33 @@ def _self_attn(
     slab-sized value ever rides a scan ys or a carry write-back.
     Attention still reads the functionally-updated slab (its compute
     operand), so outputs are bitwise unchanged.
+
+    ``kernels="pallas"`` (decode only): the fused scatter+read kernel
+    replaces the functional slab update — the new K/V row is substituted
+    into the cache pages inside the kernel (VMEM), so no updated slab is
+    ever materialized in HBM.  It replicates the dense attention math
+    bitwise, so it overrides ``attn_impl`` for the S==1 step.
     """
     q, k, v = L.attn_project_qkv(params, x, cfg, positions)
     new_cache = None
     if cache is not None:
         bsz, s = x.shape[:2]
+        if s == 1 and kernels == "pallas":
+            rows_k = k[:, 0].astype(cache["k"].dtype)
+            rows_v = v[:, 0].astype(cache["v"].dtype)
+            ctx = get_impl("decode_attention", "pallas")(
+                q, rows_k, rows_v, cache["k"], cache["v"],
+                pos=cache_pos, kv_len=kv_len,
+            )
+            if collect_rows:
+                new_cache = {"k": rows_k, "v": rows_v}
+            else:
+                idx = jnp.arange(bsz)
+                new_cache = {
+                    "k": cache["k"].at[idx, cache_pos].set(rows_k),
+                    "v": cache["v"].at[idx, cache_pos].set(rows_v),
+                }
+            return L.attn_out(params, ctx), new_cache, (k, v)
         if s == 1:
             idx = jnp.arange(bsz)
             ck = cache["k"].at[idx, cache_pos].set(k[:, 0])
@@ -295,6 +328,7 @@ def _apply_group(
     kv_chunk=1024,
     causal_skip=None,
     cache_rows=False,
+    kernels="xla",
 ):
     """Apply one period group.  Returns (x, new_group_cache, aux_losses).
 
@@ -318,7 +352,7 @@ def _apply_group(
                 positions=positions, cache=cache_i, cache_pos=cache_pos,
                 kv_len=kv_len, attn_impl=attn_impl,
                 q_chunk=q_chunk, kv_chunk=kv_chunk, causal_skip=causal_skip,
-                collect_rows=cache_rows,
+                collect_rows=cache_rows, kernels=kernels,
             )
             if c_new is not None:
                 new_cache[f"block{i}"] = c_new
@@ -428,6 +462,29 @@ def _pad_cache_seq(x, *, plans, pad_to):
     return x
 
 
+def _emit_logits(params, cfg: ArchConfig, x, kernels: str = "xla"):
+    """Final-norm -> logits for one decode position: (B, 1, d) -> (B, V).
+
+    Under ``kernels="pallas"`` the two ops run as one fused epilogue
+    (norm recomputed per vocab tile in VMEM — see
+    repro.kernels.emit_norm_logits); bitwise equal to the XLA path.
+    """
+    if kernels == "pallas":
+        w = (
+            params["embed"]["embedding"]
+            if cfg.tie_embeddings
+            else params["head"]["w"]
+        )
+        fn = params.get("final_norm")
+        return get_impl("emit_norm_logits", "pallas")(
+            x, w, norm=cfg.norm,
+            scale=fn["scale"] if cfg.norm == "rmsnorm" else None,
+            eps=cfg.norm_eps, tied=cfg.tie_embeddings,
+        )
+    xn = _norm(cfg, params.get("final_norm"), x)
+    return L.logits(params.get("head"), params["embed"], xn, cfg)[:, 0, :]
+
+
 def decode_step(
     params,
     caches,
@@ -439,11 +496,18 @@ def decode_step(
     attn_impl="dense",
     kv_chunk=1024,
     unroll=1,
+    kernels=None,
 ):
     """One-token step.  tokens: (B,) int32 (or embeds (B,1,d)); lengths:
     (B,) current context length per sequence (cache write position).
-    Returns (logits (B,V), new_caches)."""
+    Returns (logits (B,V), new_caches).
+
+    ``kernels`` (None inherits ``cfg.kernels``) selects the per-op
+    implementations (see repro.kernels): ``"pallas"`` runs the fused
+    decode-attention and emit-epilogue kernels (bitwise equal to the
+    XLA path; interpret-emulated off-TPU)."""
     plans = block_plans(cfg)
+    mode = resolve_mode(cfg.kernels if kernels is None else kernels)
     if cfg.embeds_input:
         x = embeds.astype(cfg.dtype)
         bsz = x.shape[0]
@@ -462,13 +526,12 @@ def decode_step(
             positions=positions, group_cache=group_cache,
             cache_pos=lengths, kv_len=kv_len,
             attn_impl=attn_impl, kv_chunk=kv_chunk, q_chunk=1,
+            kernels=mode,
         )
         return x, new_cache
 
     x, new_caches = lax.scan(group_fn, x, (params["blocks"], caches), unroll=unroll)
-    x = _norm(cfg, params.get("final_norm"), x)
-    lg = L.logits(params.get("head"), params["embed"], x, cfg)
-    return lg[:, 0, :], new_caches
+    return _emit_logits(params, cfg, x, mode), new_caches
 
 
 def _cache_seq_len(caches):
@@ -492,6 +555,7 @@ def prefill_step(
     kv_chunk=1024,
     unroll=1,
     logits_at: int | None = None,
+    kernels=None,
 ):
     """Chunked streaming prefill: process a prompt chunk at offset ``pos``.
 
@@ -505,8 +569,15 @@ def prefill_step(
     index lets every tail length share one compiled prefill.  Pad
     queries only pollute pad rows, which the next decode's write
     position and kv_len mask retire).
+
+    ``kernels`` (None inherits ``cfg.kernels``) is validated but prefill
+    currently runs XLA in every mode: the chunk path's offset/ragged
+    masking has no bitwise-stable tiled kernel, and prefill runs once
+    per request, not per tick — the fused kernels target the decode
+    loop (see ``decode_step`` / ``make_decode_cell``).
     """
     plans = block_plans(cfg)
+    resolve_mode(cfg.kernels if kernels is None else kernels)
     if cfg.embeds_input:
         x = embeds.astype(cfg.dtype)
     else:
@@ -692,6 +763,7 @@ def make_decode_cell(
     attn_impl: str = "dense",
     kv_chunk: int = 1024,
     admissions: int = 0,
+    kernels: str = "xla",
 ):
     """One pipeline cell of the decode stream.
 
@@ -706,8 +778,16 @@ def make_decode_cell(
     the cell's cache shard, and a steady tick touches it exclusively
     through :func:`scatter_decode_rows` — the microbatch slab is read
     (the attention operand) but never sliced out/written back.
+
+    ``kernels="pallas"`` goes one step further: the fused
+    decode-attention kernel substitutes each layer's new K/V row into
+    the cache pages in VMEM, so the steady tick also stops
+    materializing the functionally-updated slab that the XLA path
+    builds as the attention operand — row scatters become the only
+    slab-touching writes left in the tick.  Outputs stay bitwise equal.
     """
     plans = block_plans(cfg)
+    mode = resolve_mode(kernels)
 
     def cell_fn(const, state, item):
         cache = state["cache"]
@@ -759,7 +839,7 @@ def make_decode_cell(
                 positions=positions, group_cache=group_cache,
                 cache_pos=lengths, kv_len=kv_len,
                 attn_impl=attn_impl, kv_chunk=kv_chunk, q_chunk=1,
-                cache_rows=True,
+                cache_rows=True, kernels=mode,
             )
             return x, step_rows
 
@@ -779,6 +859,7 @@ def make_decode_emit(
     sample_fn,
     eos_id: int,
     max_len: int,
+    kernels: str = "xla",
 ):
     """The feedback emit closing the decode loop: final-norm -> logits ->
     sample -> re-embed.  ``sample_fn(logits, uid, ngen) -> (Bm,) int32``
@@ -789,11 +870,16 @@ def make_decode_emit(
     cache boundary — frozen slots keep flowing (batched decode does not
     shrink) but never advance, so no cache row at index >= max_len is
     ever written.
+
+    ``kernels="pallas"`` fuses the norm -> logits head into the
+    emit-epilogue kernel (repro.kernels.emit_norm_logits); the engine's
+    conditional guard around the emit column is untouched, so the head
+    matmul still only runs where the plan emits.
     """
+    mode = resolve_mode(kernels)
 
     def emit(item):
-        x = _norm(cfg, params.get("final_norm"), item["x"])
-        lg = L.logits(params.get("head"), params["embed"], x, cfg)[:, 0, :]
+        lg = _emit_logits(params, cfg, item["x"], mode)
         sampled = sample_fn(lg, item["uid"], item["ngen"])
         act = item["active"]
         tok = jnp.where(act, sampled, item["tok"])

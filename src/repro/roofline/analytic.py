@@ -133,3 +133,122 @@ def step_flops(cfg: ArchConfig, shape: ShapeCell, *, remat=True, causal_skip=Fal
         causal_skip=False,
     )
     return {"total": f["total"], "forward": f}
+
+
+# ---------------------------------------------------------------------------
+# Per-kernel decode rooflines (the serving hot path)
+# ---------------------------------------------------------------------------
+#
+# The decode tick is bandwidth-bound: one token per row means every
+# matmul streams its full weight matrix for a (B, d) activation, and the
+# attention read streams the KV slab.  The per-kernel terms below model
+# the two fused Pallas ops (decode_attention, emit_norm_logits) and the
+# XLA baselines they replace — the XLA decode-attention term carries the
+# extra slab write that the functional ``cache.at[idx, pos].set(rows)``
+# materializes, which is exactly the traffic the fused kernel removes.
+
+
+def _itemsize(cfg: ArchConfig) -> int:
+    import jax.numpy as jnp
+
+    return jnp.dtype(cfg.dtype).itemsize
+
+
+def decode_kernel_rooflines(
+    cfg: ArchConfig, *, batch: int, kv_len: int, mode: str = "pallas"
+) -> dict[str, dict[str, float]]:
+    """Roofline terms for one invocation of each decode-path kernel op.
+
+    ``decode_attention`` covers one attention layer's single-token step
+    over a ``batch``-row microbatch with KV context ``kv_len`` (the
+    cache slab's allocated length — decode streams the whole slab, rows
+    past the valid length are masked, not skipped).  ``emit_norm_logits``
+    covers the final-norm → logits epilogue for the same microbatch.
+
+    Returns ``{op: {"flops", "hbm_bytes", "intensity"}}``; intensity is
+    FLOPs per HBM byte — compare against the machine balance point to
+    see both ops sit deep in the bandwidth-bound regime.  ``mode`` picks
+    the traffic model: "xla" charges the functional slab write
+    (scatter materializes the updated KV slab) and the materialized
+    norm intermediate; "pallas" charges row-granularity cache writes
+    and the fused epilogue's single pass over the head weights.
+    """
+    it = _itemsize(cfg)
+    d, h, kv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    v = cfg.vocab_size
+
+    # -- decode_attention: QK^T + PV over the slab (matmul convention,
+    # matching _attn_layer_flops; softmax/mask flops are negligible).
+    attn_flops = 2 * 2 * batch * kv_len * h * dh
+    slab = batch * kv_len * kv * dh * it          # one of K or V
+    rows = batch * kv * dh * it                   # one new row per item
+    qout = 2 * batch * h * dh * it                # q read + ctx write
+    attn_bytes = 2 * slab + 2 * rows + qout       # read both slabs + new rows
+    if mode == "pallas":
+        attn_bytes += 2 * rows                    # row-granularity cache write
+    else:
+        attn_bytes += 2 * slab                    # functional slab materialize
+    # -- emit_norm_logits: rmsnorm/layernorm + (B,d)x(d,V) head matmul.
+    emit_flops = 2 * batch * d * v + 6 * batch * d
+    emit_bytes = d * v * it + batch * d * it + batch * v * 4  # w + x + f32 out
+    if mode != "pallas":
+        emit_bytes += 2 * batch * d * it          # normed intermediate r/w
+
+    out = {}
+    for op, fl, by in (
+        ("decode_attention", float(attn_flops), float(attn_bytes)),
+        ("emit_norm_logits", float(emit_flops), float(emit_bytes)),
+    ):
+        out[op] = {"flops": fl, "hbm_bytes": by, "intensity": fl / by}
+    return out
+
+
+def predicted_tick_seconds(
+    cfg: ArchConfig,
+    *,
+    batch: int,
+    kv_len: int,
+    peak_flops_per_second: float,
+    hbm_bytes_per_second: float,
+    mode: str = "pallas",
+) -> dict[str, float]:
+    """Roofline lower bound for one full-model decode step + emit.
+
+    Sums, over all layers, max(compute, bandwidth) time for (a) the
+    weight-streaming matmuls (projections/MLP/SSD — FLOPs from
+    :func:`forward_flops`, bytes = parameter bytes, the decode regime's
+    dominant term), and (b) the per-kernel decode terms from
+    :func:`decode_kernel_rooflines` for every attention layer, plus one
+    emit epilogue.  Returns ``{"attn", "emit", "weights", "total"}``
+    seconds; ``mode`` selects the xla/pallas traffic model so
+    bench_serve can report achieved-vs-predicted per tick for both.
+    """
+    from repro.models.params import param_count
+    from repro.models.transformer import model_layout
+
+    def t(flops: float, bytes_: float) -> float:
+        return max(flops / peak_flops_per_second, bytes_ / hbm_bytes_per_second)
+
+    per = decode_kernel_rooflines(cfg, batch=batch, kv_len=kv_len, mode=mode)
+    n_attn = sum(1 for b in cfg.block_pattern if b == "attn") * (
+        cfg.num_layers // cfg.pattern_period
+    )
+    ka = per["decode_attention"]
+    ke = per["emit_norm_logits"]
+    attn_s = n_attn * t(ka["flops"], ka["hbm_bytes"])
+    emit_s = t(ke["flops"], ke["hbm_bytes"])
+
+    # Weight-streaming body: all non-attention-score, non-head compute.
+    f = forward_flops(cfg, batch, batch, kv_len, with_head=False)
+    body_flops = f["proj"] + f["ffn"] + f["ssd"]
+    body_bytes = (
+        param_count(model_layout(cfg)) - cfg.d_model * cfg.vocab_size
+    ) * _itemsize(cfg)
+    weights_s = t(body_flops, max(body_bytes, 0))
+
+    return {
+        "attn": attn_s,
+        "emit": emit_s,
+        "weights": weights_s,
+        "total": attn_s + emit_s + weights_s,
+    }

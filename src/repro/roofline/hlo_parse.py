@@ -312,6 +312,46 @@ def unguarded_matches(text: str, match) -> tuple[int, int]:
     return total, unguarded
 
 
+def slab_scatter_counts(text: str, slab_bytes: int) -> tuple[int, int]:
+    """Count slab-sized cache writes: scatter / dynamic-update-slice ops
+    whose *output* is at least ``slab_bytes`` (the full KV-cache slab for
+    one layer group — a row write's output is the same slab shape, but a
+    functional ``cache.at[idx, pos].set(rows)`` materializes the whole
+    updated slab as a new buffer, which is what shows up here).
+
+    Returns ``(total, unguarded)`` with the same guarded/unguarded split
+    as :func:`unguarded_matches`: an op inside a conditional branch does
+    not run on devices where the branch predicate is false.  The fused
+    Pallas decode-attention path performs the row substitution inside
+    the kernel, so its steady tick carries strictly fewer slab-sized
+    scatters than the XLA path — asserted comparatively (pallas < xla)
+    rather than as an absolute zero, because the in-plan admission
+    buffer legitimately writes freshly prefilled rows.
+    """
+
+    def is_slab_write(ins) -> bool:
+        if ins.opcode not in ("scatter", "dynamic-update-slice"):
+            return False
+        return ins.out_bytes >= slab_bytes
+
+    return unguarded_matches(text, is_slab_write)
+
+
+def fused_region_present(text: str, marker: str) -> bool:
+    """True iff any instruction's ``op_name`` metadata contains
+    ``marker``.  The Pallas ops wrap their ``pallas_call`` in
+    ``jax.named_scope(FUSION_SCOPE)``; the scope name survives into the
+    compiled module's op_name metadata, so presence of the marker means
+    the fused kernel (or, in interpret mode, its lowered emulation) is
+    structurally in the executed program — and absence in an XLA-mode
+    module is the negative control.
+    """
+    for m in re.finditer(r'op_name="([^"]*)"', text):
+        if marker in m.group(1):
+            return True
+    return False
+
+
 def head_matmul_conditional_only(text: str, logits_width: int) -> bool:
     """True iff the module contains at least one logits-width matmul and
     every one of them is conditional-guarded (see

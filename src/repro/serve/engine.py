@@ -54,6 +54,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig, DecodePipelineConfig
 from repro.core import FutureEvaluator, LazyEvaluator, Stream
+from repro.kernels import resolve_mode
 from repro.models import layers as L
 from repro.models import transformer as T
 
@@ -457,12 +458,19 @@ class StreamEngine(_EngineBase):
             params, T.init_cache(cfg, scfg.max_batch, scfg.max_len),
             pcfg.num_cells,
         )
+        # Kernel dispatch for the hot path: the pipeline knob overrides
+        # the model knob; resolved once ("auto" -> backend) so cells and
+        # emit agree.
+        self.kernels = resolve_mode(
+            cfg.kernels if pcfg.kernels is None else pcfg.kernels
+        )
         self._cell_fn = T.make_decode_cell(
             cfg,
             num_cells=pcfg.num_cells,
             microbatch=self.mb_size,
             attn_impl=scfg.attn_impl,
             admissions=pcfg.admit_per_round,
+            kernels=self.kernels,
         )
         self._emit = T.make_decode_emit(
             params, cfg,
@@ -471,6 +479,7 @@ class StreamEngine(_EngineBase):
             ),
             eos_id=scfg.eos_id,
             max_len=scfg.max_len,
+            kernels=self.kernels,
         )
         self._zero_single = T.init_cache(cfg, 1, scfg.max_len)
         self._embed = jax.jit(

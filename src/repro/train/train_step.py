@@ -50,6 +50,11 @@ class TrainConfig:
     # work through a custom VJP — true 1F1B, min(S, M) stash at the
     # plan level; gradients bitwise-equal).  See configs.base.
     pipeline_backward: str = "autodiff"
+    # Kernel dispatch (repro.kernels).  Training currently requires
+    # "xla": the Pallas kernels have no VJPs wired, so "pallas" is
+    # rejected up front (see make_train_step) instead of failing deep in
+    # jax.grad; "auto" resolves to "xla" on every backend here.
+    kernels: str = "xla"
 
     def pipeline_config(
         self, num_stages: int, axis_name: str = "pod"
@@ -165,6 +170,27 @@ def make_train_step(
     param_pspecs: PyTree | None = None,
 ):
     """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+    from repro.kernels import KERNEL_MODES
+
+    if tcfg.kernels not in KERNEL_MODES:
+        raise ValueError(
+            f"kernels={tcfg.kernels!r}; expected one of {KERNEL_MODES}"
+        )
+    if tcfg.kernels == "pallas":
+        if tcfg.pipeline_backward == "planned":
+            raise ValueError(
+                "kernels='pallas' is not supported with "
+                "pipeline_backward='planned': the planned backward replays "
+                "forward units through their custom VJP, and the Pallas "
+                "kernels have no VJPs wired yet.  Use kernels='xla' (or "
+                "'auto', which resolves to xla for training)."
+            )
+        raise ValueError(
+            "kernels='pallas' is not supported for training: the Pallas "
+            "kernels have no VJPs wired, so jax.grad cannot transpose "
+            "them.  Use kernels='xla' (or 'auto', which resolves to xla "
+            "for training); pallas dispatch is a serving-path knob."
+        )
 
     def train_step(params, opt_state, batch):
         grads, metrics = accumulate_grads(params, cfg, batch, tcfg, param_pspecs)

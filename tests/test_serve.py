@@ -265,6 +265,61 @@ class TestStreamEngineLazy:
         assert near.done
 
 
+class TestStreamEnginePallas:
+    """``kernels="pallas"`` (interpret-emulated on CPU) must be bitwise
+    token-identical to the xla sequential engine: the fused decode
+    attention replaces the per-layer slab update + dense read, and the
+    fused emit epilogue replaces final-norm + logits.  The arch axis
+    covers layernorm+tied (olmo), rmsnorm+untied hybrid attn/ssm
+    (jamba), and attention-free rmsnorm+tied (mamba2 — emit fusion
+    only)."""
+
+    ARCHS = ["olmo-1b", "jamba-1.5-large-398b", "mamba2-1.3b"]
+
+    def _run_pair(self, arch, temperature=0.0):
+        sc = smoke_config(get_config(arch))
+        params = init_params(jax.random.PRNGKey(0), T.model_layout(sc))
+        scfg = ServeConfig(max_batch=4, max_len=32, prefill_chunk=4,
+                           max_new_tokens=5, temperature=temperature, seed=3)
+        prompts = [np.array([5, 9, 2, 7]), np.array([3, 1]),
+                   np.array([2] * 5), np.array([8, 8, 4]), np.array([6])]
+        budgets = [5, 3, 4, 5, 2]
+        ref = Engine(params, sc, scfg)
+        reqs_a = [ref.submit(p, b) for p, b in zip(prompts, budgets)]
+        ref.run_until_drained()
+        pcfg = DecodePipelineConfig(num_cells=2, microbatches=2,
+                                    round_steps=3, admit_per_round=2,
+                                    kernels="pallas")
+        eng = StreamEngine(params, sc, scfg, pcfg)
+        assert eng.kernels == "pallas"
+        reqs_b = [eng.submit(p, b) for p, b in zip(prompts, budgets)]
+        eng.run_until_drained()
+        for ra, rb in zip(reqs_a, reqs_b):
+            assert rb.done
+            assert ra.out_tokens == rb.out_tokens
+
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_greedy_bitwise_vs_xla_sequential(self, arch):
+        self._run_pair(arch)
+
+    def test_temperature_bitwise_vs_xla_sequential(self):
+        self._run_pair("olmo-1b", temperature=0.9)
+
+    def test_arch_knob_inherited_when_pipeline_unset(self, cell_model):
+        """DecodePipelineConfig.kernels=None defers to ArchConfig.kernels."""
+        sc, params = cell_model
+        scfg = ServeConfig(max_batch=2, max_len=32, prefill_chunk=4,
+                           max_new_tokens=3)
+        eng = StreamEngine(
+            params, sc.with_overrides(kernels="pallas"), scfg,
+            DecodePipelineConfig(num_cells=2, microbatches=2,
+                                 round_steps=2, admit_per_round=1))
+        assert eng.kernels == "pallas"
+        r = eng.submit(np.array([5, 9, 2]))
+        eng.run_until_drained()
+        assert r.done and len(r.out_tokens) == 3
+
+
 class TestServeBenchGate:
     """The BENCH_serve.json regression gate is throughput-directional."""
 
@@ -296,3 +351,15 @@ class TestServeBenchGate:
         base = [self._rec(tok_s=100.0)]
         fresh = [self._rec(tok_s=150.0)]
         assert check_serve_regressions(base, fresh, 0.10) == []
+
+    def test_kernels_axis_distinct_cells(self):
+        """pallas cells never gate against xla cells; records written
+        before the kernels axis existed keep gating the xla cells."""
+        from benchmarks.run import check_serve_regressions
+
+        legacy = [self._rec(tok_s=100.0)]  # pre-axis baseline: no key
+        pallas = [dict(self._rec(tok_s=10.0), kernels="pallas")]
+        assert check_serve_regressions(legacy, pallas, 0.10) == []
+        xla = [dict(self._rec(tok_s=80.0), kernels="xla")]
+        out = check_serve_regressions(legacy, xla, 0.10)
+        assert len(out) == 1 and out[0]["batch"] == 8

@@ -75,21 +75,71 @@ print("SERVE_TEMPERATURE", all(
 # device — together: no non-final device's executed tick body contains
 # the LM head.
 from repro.roofline.hlo_parse import head_matmul_conditional_only
+
+
+def round_text(eng, pcfg):
+    adm, _ = eng._plan_admissions(pcfg.round_steps)
+    ii, ov, ap = eng._build_round_inputs(adm)
+    return eng._round.lower(
+        {**eng.cell_consts, "adm": ap}, eng.cell_states, ii, ov
+    ).compile().as_text()
+
+
+texts = {}
 for sched, v, cells, m in [("gpipe", 1, 8, 8), ("interleaved", 2, 8, 4)]:
     pcfg_h = DecodePipelineConfig(num_cells=cells, microbatches=m,
                                   schedule=sched, interleave=v,
                                   round_steps=4, admit_per_round=4)
     eng_h = StreamEngine(params, sc, scfg, pcfg_h, mesh=mesh)
-    adm_h, _ = eng_h._plan_admissions(pcfg_h.round_steps)
-    ii, ov, ap = eng_h._build_round_inputs(adm_h)
-    txt = eng_h._round.lower(
-        {**eng_h.cell_consts, "adm": ap}, eng_h.cell_states, ii, ov
-    ).compile().as_text()
+    txt = round_text(eng_h, pcfg_h)
+    texts[sched] = txt
     guarded = head_matmul_conditional_only(txt, sc.vocab_size)
     plan = eng_h.evaluator.plan_for(
         pcfg_h.round_steps * m, (0, 0), feedback_lag=m)
     last_only = bool((plan.emit[:, :3] == 0).all()) and int(plan.emit.sum()) > 0
     print(f"EMIT_SPLIT_{sched.upper()}", guarded and last_only)
+
+# Pallas decode cells: same pipelined battery with the fused
+# decode-attention + emit kernels (interpret-emulated on CPU) — tokens
+# must stay bit-identical to the sequential xla reference.
+pcfg_p = DecodePipelineConfig(num_cells=8, microbatches=8, schedule="gpipe",
+                              round_steps=4, admit_per_round=4,
+                              kernels="pallas")
+eng_p = StreamEngine(params, sc, scfg, pcfg_p, mesh=mesh)
+reqs_p = [eng_p.submit(p, b) for p, b in zip(prompts, budgets)]
+done_p = eng_p.run_until_drained()
+print("SERVE_GPIPE_PALLAS", len(done_p) == len(prompts) and all(
+    rb.done and ra.out_tokens == rb.out_tokens
+    for ra, rb in zip(reqs_ref, reqs_p)))
+
+# Structural pins on the compiled round HLO (positive + negative
+# controls): the fused-kernel name scopes appear only in the pallas
+# module; the pallas steady tick carries at most half the xla module's
+# slab-sized cache writes (the per-layer K/V slab materializations are
+# gone — what remains is admission row traffic); and the LM head stays
+# conditional-guarded with the fused emit in place.
+from repro.kernels.decode_attention.ops import FUSION_SCOPE as ATTN_SCOPE
+from repro.kernels.emit_norm_logits.ops import FUSION_SCOPE as EMIT_SCOPE
+from repro.roofline.hlo_parse import fused_region_present, slab_scatter_counts
+
+txt_xla = texts["gpipe"]
+txt_pallas = round_text(eng_p, pcfg_p)
+print("HLO_MARKER_PALLAS", fused_region_present(txt_pallas, ATTN_SCOPE)
+      and fused_region_present(txt_pallas, EMIT_SCOPE))
+print("HLO_MARKER_XLA_ABSENT", not fused_region_present(txt_xla, ATTN_SCOPE)
+      and not fused_region_present(txt_xla, EMIT_SCOPE))
+mb = scfg.max_batch // pcfg_p.microbatches
+slab = (mb * scfg.max_len * sc.num_kv_heads * sc.head_dim
+        * jax.numpy.dtype(sc.dtype).itemsize)
+tot_x, ung_x = slab_scatter_counts(txt_xla, slab)
+tot_p, ung_p = slab_scatter_counts(txt_pallas, slab)
+# The group body's K+V slab materializations (one static pair — the
+# layer scan counts its body once) must be gone; the writes both modes
+# share are admission-buffer row traffic, which stays.
+print("HLO_SLAB_SCATTER", tot_x > 0 and tot_p <= tot_x - 2
+      and ung_p <= ung_x, f"xla={tot_x}/{ung_x} pallas={tot_p}/{ung_p}")
+print("HLO_HEAD_GUARD_PALLAS",
+      head_matmul_conditional_only(txt_pallas, sc.vocab_size))
 """
 
 
@@ -128,3 +178,27 @@ def test_emit_split_head_matmul_last_stage_only_gpipe(report):
 
 def test_emit_split_head_matmul_last_stage_only_interleaved(report):
     assert report["EMIT_SPLIT_INTERLEAVED"].startswith("True")
+
+
+def test_pipelined_pallas_bit_identical(report):
+    # kernels="pallas" through the 4-device FutureEvaluator: fused decode
+    # attention + emit epilogue, tokens identical to the xla reference
+    assert report["SERVE_GPIPE_PALLAS"].startswith("True")
+
+
+def test_fusion_markers_present_in_pallas_hlo_only(report):
+    # positive control: both kernel name scopes in the pallas module...
+    assert report["HLO_MARKER_PALLAS"].startswith("True")
+    # ...negative control: neither in the xla module
+    assert report["HLO_MARKER_XLA_ABSENT"].startswith("True")
+
+
+def test_pallas_round_drops_steady_tick_slab_writes(report):
+    # the layer-scan body's K/V slab materializations are gone from the
+    # pallas round; remaining slab-sized writes are admission traffic
+    # both modes share
+    assert report["HLO_SLAB_SCATTER"].startswith("True")
+
+
+def test_head_matmul_stays_guarded_under_pallas(report):
+    assert report["HLO_HEAD_GUARD_PALLAS"].startswith("True")
