@@ -39,9 +39,15 @@ on this container (chunk=16, smoke model): padded ~40 ms vs per-token
 ~490 ms — a ~12x TTFT win for short ragged prompts, since tail cost
 used to scale with ``plen % chunk``.
 
+**Chaos cells** (the ``chaos_*`` rows): the same drain under the
+:class:`repro.serve.supervisor.ServeSupervisor` — once clean, once with
+an injected mid-drain fault.  Recorded per cell: ``requests_lost``
+(gated == 0), ``bitwise_equal`` to the clean run (gated True), and
+``recovery_overhead_seconds`` (the snapshot/restore/replay cost).
+
 ``run`` returns records persisted to ``BENCH_serve.json`` — the serving
 perf trajectory ``benchmarks/run.py --check`` gates on (tokens/sec may
-not regress; see run.py).
+not regress; chaos cells must keep zero loss; see run.py).
 """
 from __future__ import annotations
 
@@ -163,6 +169,31 @@ for _ in range(3):
     t0 = time.perf_counter(); padded(); times_p.append(time.perf_counter() - t0)
     t0 = time.perf_counter(); per_token(); times_t.append(time.perf_counter() - t0)
 print("TAIL", min(times_p), min(times_t))
+
+# chaos cells: the same drain under the ServeSupervisor, once clean and
+# once with a mid-drain injected fault.  The delta is the cost of
+# snapshot+restore+replay; the gated invariants are zero lost requests
+# and bitwise-equal tokens (benchmarks/run.py --check pins both).
+from repro.serve.supervisor import ServeSupervisor, chaos_injector
+for label in ("sequential", "stream_lazy"):
+    eng = engines[label]
+    sup = ServeSupervisor(eng)
+    pristine = sup.snapshot()
+    t0 = time.perf_counter()
+    reqs = [sup.submit(p) for p in workload(np.random.default_rng(7))]
+    sup.run_until_drained()
+    clean_wall = time.perf_counter() - t0
+    golden = [r.out_tokens for r in reqs]
+    sup2 = ServeSupervisor(
+        eng, fail_injector=chaos_injector("raise", sup.stats["rounds"] // 2))
+    sup2.restore(pristine)
+    t0 = time.perf_counter()
+    reqs2 = [sup2.submit(p) for p in workload(np.random.default_rng(7))]
+    sup2.run_until_drained()
+    chaos_wall = time.perf_counter() - t0
+    print("CHAOS", label, clean_wall, chaos_wall,
+          sup2.stats["requests_lost"], sup2.stats["restarts"],
+          [r.out_tokens for r in reqs2] == golden)
 """
 
 
@@ -216,6 +247,7 @@ def run(quick: bool = True):
         )
         tail = None
         per_engine = {}
+        chaos = {}
         for line in out.strip().splitlines():
             parts = line.split()
             if parts[0] == "ENGINE":
@@ -224,6 +256,11 @@ def run(quick: bool = True):
                 )
             elif parts[0] == "TAIL":
                 tail = (float(parts[1]), float(parts[2]))
+            elif parts[0] == "CHAOS":
+                chaos[parts[1]] = (
+                    float(parts[2]), float(parts[3]),
+                    int(parts[4]), int(parts[5]), parts[6] == "True",
+                )
         lazy_tps = None
         if "stream_lazy" in per_engine:
             w, _, tot = per_engine["stream_lazy"]
@@ -279,6 +316,37 @@ def run(quick: bool = True):
                     "tick_vs_roofline": (
                         achieved_tick / pred if pred else None
                     ),
+                }
+            )
+        for label, (cw, xw, lost, restarts, bitwise) in chaos.items():
+            # supervised-recovery cells: no tokens_per_sec on purpose —
+            # the gate on these is zero-loss + bitwise, not throughput.
+            rows.append(
+                csv_row(
+                    f"serve_chaos_{label}_b{batch}",
+                    xw,
+                    f"clean_s={cw:.2f},requests_lost={lost},"
+                    f"restarts={restarts},bitwise={bitwise},"
+                    f"overhead_ms={(xw - cw)*1e3:.0f}",
+                )
+            )
+            records.append(
+                {
+                    "engine": f"chaos_{label}",
+                    "schedule": "-",
+                    "devices": 1,
+                    "interleave": 1,
+                    "kernels": "xla",
+                    "batch": batch,
+                    "requests": 2 * batch,
+                    "dim": dim,
+                    "layers": layers,
+                    "requests_lost": lost,
+                    "restarts": restarts,
+                    "bitwise_equal": bitwise,
+                    "clean_wall_seconds": cw,
+                    "chaos_wall_seconds": xw,
+                    "recovery_overhead_seconds": xw - cw,
                 }
             )
         if tail is not None:

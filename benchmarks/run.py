@@ -147,7 +147,11 @@ def check_serve_regressions(
 ) -> list[dict]:
     """Serve cells whose tokens/sec regressed past ``tolerance`` —
     the throughput-directional (higher is better) instance of the
-    shared gate."""
+    shared gate — plus the chaos invariants: every fresh ``chaos_*``
+    cell must report ``requests_lost == 0`` and ``bitwise_equal``
+    recovery.  The chaos check is absolute (fresh-run-only, no
+    baseline needed): losing a request under fault injection is a
+    correctness bug at any tolerance."""
     out = _regressions(
         baseline, fresh, _serve_cell_key, "tokens_per_sec", tolerance,
         higher_is_better=True, report_fields=("engine", "batch"),
@@ -155,6 +159,18 @@ def check_serve_regressions(
     for r in out:
         r["baseline_tok_s"] = r.pop("baseline_tokens_per_sec")
         r["measured_tok_s"] = r.pop("measured_tokens_per_sec")
+    for rec in fresh:
+        if "requests_lost" not in rec:
+            continue
+        if rec["requests_lost"] != 0 or rec.get("bitwise_equal") is False:
+            out.append(
+                {
+                    "engine": rec.get("engine"),
+                    "batch": rec.get("batch"),
+                    "requests_lost": rec["requests_lost"],
+                    "bitwise_equal": rec.get("bitwise_equal"),
+                }
+            )
     return out
 
 
@@ -207,7 +223,11 @@ GATES = {
         lambda: bench_serve, SERVE_BASELINE_PATH, _serve_cell_key,
         check_serve_regressions, "tokens_per_sec",
         lambda r: (
-            f"# REGRESSION serve {r['engine']} b={r['batch']}: "
+            f"# CHAOS VIOLATION serve {r['engine']} b={r['batch']}: "
+            f"requests_lost={r['requests_lost']} "
+            f"bitwise_equal={r['bitwise_equal']}"
+            if "requests_lost" in r
+            else f"# REGRESSION serve {r['engine']} b={r['batch']}: "
             f"{r['baseline_tok_s']:.1f} -> {r['measured_tok_s']:.1f} "
             f"tok/s ({r['ratio']:.2f}x)"
         ),
@@ -282,15 +302,20 @@ def _run_gate(label: str, tolerance: float, full: bool) -> int:
         f"{len(regressions)} regressed beyond {tolerance:.0%}",
         file=sys.stderr,
     )
+    # Violations outrank incomparability: a chaos cell losing requests
+    # must fail the gate even when no throughput cell matched the
+    # baseline (the chaos invariants are fresh-run-only).
+    for r in regressions:
+        print(fmt(r), file=sys.stderr)
+    if regressions:
+        return 1
     if not compared:
         print(
             f"# --check {label}: no comparable cells (size mismatch?)",
             file=sys.stderr,
         )
         return 2
-    for r in regressions:
-        print(fmt(r), file=sys.stderr)
-    return 1 if regressions else 0
+    return 0
 
 
 def run_check(tolerance: float, full: bool, only: str | None = None) -> int:

@@ -11,6 +11,13 @@
         --num-layers 8 --engine stream --schedule interleaved \
         --interleave 2 --cells 8 --microbatches 4 --max-batch 8 \
         --round-steps 8 --devices 4
+
+    # Resilient serving: supervised rounds with a watchdog deadline,
+    # per-request deadlines, a bounded admission queue, and (here) a
+    # chaos fault injected at round 2 to demonstrate zero-loss replay:
+    PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --smoke \
+        --requests 8 --deadline-ms 60000 --max-queue 64 \
+        --watchdog-ms 30000 --chaos raise@2
 """
 from __future__ import annotations
 
@@ -82,6 +89,22 @@ def main(argv=None):
     ap.add_argument("--model-copy-gbps", type=float, default=50.0,
                     help="modeled cache write bandwidth (GB/s) for the "
                     "copy-bytes term")
+    # Resilience knobs (repro.serve.supervisor / engine robustness)
+    ap.add_argument("--deadline-ms", type=float, default=0,
+                    help="per-request wall-clock deadline from submission "
+                    "(0 = none); expired requests resolve with "
+                    "status='expired' at the next step boundary")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bounded admission queue (0 = unbounded); a full "
+                    "queue sheds load by rejecting submit")
+    ap.add_argument("--watchdog-ms", type=float, default=0,
+                    help="supervised-round watchdog deadline (0 = off); "
+                    "setting it wraps the engine in a ServeSupervisor "
+                    "with snapshot/replay fault recovery")
+    ap.add_argument("--chaos", default=None, metavar="KIND@ROUND",
+                    help="inject one fault for the recovery demo: "
+                    "raise@K, nan@K, wedge@K, or sigterm@K (implies the "
+                    "supervisor; see repro.serve.supervisor)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -101,6 +124,7 @@ def main(argv=None):
         max_batch=args.max_batch, max_len=args.max_len,
         prefill_chunk=args.prefill_chunk, max_new_tokens=args.max_new,
         temperature=args.temperature, seed=args.seed,
+        max_queue=args.max_queue or None,
     )
     if args.engine == "stream":
         ndev = args.devices or jax.device_count()
@@ -158,17 +182,59 @@ def main(argv=None):
             )
         eng = Engine(params, cfg, scfg)
         mode = "sequential"
+
+    # Supervised serving: --chaos or --watchdog-ms wraps the engine in a
+    # ServeSupervisor (round snapshot/replay, bounded retry, SIGTERM
+    # drain).  Submission and drain go through the supervisor so its
+    # bookkeeping sees every request.
+    server, sup = eng, None
+    if args.chaos or args.watchdog_ms:
+        from repro.serve.supervisor import (
+            ServeSupervisor, SupervisorConfig, chaos_injector,
+        )
+
+        injector = None
+        if args.chaos:
+            try:
+                kind, at = args.chaos.rsplit("@", 1)
+                injector = chaos_injector(kind, int(at))
+            except ValueError as e:
+                raise SystemExit(f"--chaos expects KIND@ROUND: {e}")
+        sup = ServeSupervisor(
+            eng,
+            SupervisorConfig(
+                deadline_s=(args.watchdog_ms / 1e3) or None,
+            ),
+            fail_injector=injector,
+        )
+        sup.install_signal_handlers()
+        server = sup
+        mode += " +supervised"
+
     np_rng = np.random.default_rng(args.seed)
+    deadline_s = (args.deadline_ms / 1e3) or None
     t0 = time.perf_counter()
-    reqs = [
-        eng.submit(np_rng.integers(0, cfg.vocab_size, size=args.prompt_len))
-        for _ in range(args.requests)
-    ]
-    done = eng.run_until_drained()
+    reqs, shed = [], 0
+    from repro.serve.engine import QueueFullError
+
+    for _ in range(args.requests):
+        prompt = np_rng.integers(0, cfg.vocab_size, size=args.prompt_len)
+        try:
+            reqs.append(eng.submit(prompt, deadline_s=deadline_s)
+                        if sup is None
+                        else sup.submit(prompt, deadline_s=deadline_s))
+        except QueueFullError:
+            shed += 1
+    done = server.run_until_drained()
     wall = time.perf_counter() - t0
     total_new = sum(len(r.out_tokens) for r in done)
+    expired = sum(r.status == "expired" for r in done)
     print(f"[{mode}] {len(done)} requests, {total_new} tokens in {wall:.2f}s "
           f"({total_new/wall:.1f} tok/s with continuous batching)")
+    if shed or expired:
+        print(f"  load_shed={shed} expired={expired}")
+    if sup is not None:
+        print(f"  supervisor: {sup.stats}")
     for r in done[:4]:
         print(f"  req {r.uid}: {r.out_tokens}")
     return done

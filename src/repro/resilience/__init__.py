@@ -1,0 +1,40 @@
+"""Shared resilience machinery: the failure side of the Future substitution.
+
+The paper's move — substituting Future for Lazy — makes failure a
+first-class value: a forced future can fail, time out, or be retried,
+and the *flow* (not a single force point) is where failure must
+propagate.  This package is the generic runbook both long-lived loops in
+this repo consume:
+
+* :mod:`repro.train.fault` — ``ResilientLoop`` wraps the train step
+  (checkpoint/restart, heartbeats, stragglers, preemption windows).
+* :mod:`repro.serve.supervisor` — ``ServeSupervisor`` wraps a serving
+  engine (round snapshot/restore, watchdog deadline, numerics poisoning
+  detection, graceful SIGTERM drain).
+
+Modules:
+
+* :mod:`repro.resilience.injection` — the fail-injector protocol and the
+  ``OneShotInjector`` used by every chaos test: a callable invoked at
+  each step/round boundary that raises (or mutates the target) to
+  simulate a fault, exactly once.
+* :mod:`repro.resilience.heartbeat` — monotonic per-step heartbeat file
+  + staleness reader (the external-supervisor detection side).
+* :mod:`repro.resilience.straggler` — EMA step-time tracker with a
+  policy callback.
+* :mod:`repro.resilience.restart` — bounded restart budget with
+  exponential backoff.
+"""
+from repro.resilience.heartbeat import Heartbeat
+from repro.resilience.injection import InjectedFault, OneShotInjector
+from repro.resilience.restart import RestartBudget, RestartPolicy
+from repro.resilience.straggler import StragglerTracker
+
+__all__ = [
+    "Heartbeat",
+    "InjectedFault",
+    "OneShotInjector",
+    "RestartBudget",
+    "RestartPolicy",
+    "StragglerTracker",
+]

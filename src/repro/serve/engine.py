@@ -40,10 +40,33 @@ Common architecture:
   * sampling: greedy argmax, or temperature sampling whose RNG derives
     from ``(seed, request uid, token index)`` — reproducible per request
     regardless of admission order, batching, or evaluator.
+
+Request-lifecycle robustness (see also :mod:`repro.serve.supervisor`
+for round-level fault recovery):
+  * **bounded admission** — ``ServeConfig.max_queue`` caps the host
+    queue; ``submit`` raises :class:`QueueFullError` (explicit load
+    shedding) instead of queueing unboundedly under overload.
+  * **deadlines** — ``submit(..., deadline_s=...)`` attaches a
+    wall-clock budget; expired requests resolve with
+    ``status="expired"`` at the next step boundary instead of holding a
+    slot forever.
+  * **cancellation** — ``cancel(uid)`` retires a queued or in-flight
+    request through the normal retirement machinery (its slot frees for
+    the next admission; takes effect at the next step/round boundary).
+  * **degraded mode** — a ``kernels="pallas"`` StreamEngine whose fused
+    kernels fail to dispatch falls back to the bitwise-identical
+    ``"xla"`` path, recording a degradation event, instead of taking
+    the engine down.
+  * **honest drain** — ``run_until_drained`` raises
+    :class:`DrainTimeoutError` naming the undrained uids when
+    ``max_steps`` expires with requests still in flight, instead of
+    silently truncating.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
+import warnings
 from collections import deque
 from functools import partial
 from typing import Any
@@ -61,6 +84,22 @@ from repro.models import transformer as T
 PyTree = Any
 
 
+class QueueFullError(RuntimeError):
+    """Load shedding: the admission queue is at ``max_queue``."""
+
+
+class DrainTimeoutError(RuntimeError):
+    """``run_until_drained`` hit ``max_steps`` with requests in flight."""
+
+    def __init__(self, max_steps: int, undrained: list[int]):
+        self.max_steps = max_steps
+        self.undrained = undrained
+        super().__init__(
+            f"not drained after {max_steps} steps; "
+            f"undrained request uids: {undrained}"
+        )
+
+
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
     max_batch: int = 8
@@ -71,6 +110,7 @@ class ServeConfig:
     temperature: float = 0.0  # 0 => greedy
     attn_impl: str = "dense"
     seed: int = 0
+    max_queue: int | None = None  # None: unbounded admission queue
 
 
 @dataclasses.dataclass
@@ -80,6 +120,8 @@ class Request:
     max_new_tokens: int
     out_tokens: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    deadline: float | None = None  # absolute time.monotonic() budget
+    status: str = "ok"  # "ok" | "cancelled" | "expired"
 
 
 def sample_token(logits, temperature: float, seed: int, uid, ngen):
@@ -122,6 +164,9 @@ class _EngineBase:
         self.active: list[Request | None] = [None] * scfg.max_batch
         self.queue: deque[Request] = deque()
         self._uid = 0
+        # Lifecycle event log: degradations, load sheds, cancellations,
+        # expiries — host-side observability, never on the device path.
+        self.events: list[dict] = []
         # logits_at is passed traced (not static) so every ragged-tail
         # length shares one compiled prefill per chunk width.
         self._prefill = jax.jit(
@@ -130,8 +175,20 @@ class _EngineBase:
 
     # -- public API ----------------------------------------------------------
 
-    def submit(self, prompt: np.ndarray, max_new_tokens: int | None = None) -> Request:
-        """Returns the request handle (its .done flag is the future)."""
+    def submit(
+        self,
+        prompt: np.ndarray,
+        max_new_tokens: int | None = None,
+        deadline_s: float | None = None,
+    ) -> Request:
+        """Returns the request handle (its .done flag is the future).
+
+        ``deadline_s`` is a wall-clock budget from submission; an
+        expired request resolves with ``status="expired"`` at the next
+        step boundary.  With ``max_queue`` set, an over-full queue
+        raises :class:`QueueFullError` — acceptance is explicit, so
+        "zero accepted requests lost" is a meaningful contract.
+        """
         prompt = np.asarray(prompt, np.int32)
         if prompt.size == 0:
             raise ValueError("empty prompt")
@@ -140,22 +197,60 @@ class _EngineBase:
                 f"prompt length {len(prompt)} needs >= 1 free cache row; "
                 f"max_len={self.scfg.max_len}"
             )
+        mq = self.scfg.max_queue
+        if mq is not None and len(self.queue) >= mq:
+            self.events.append({"event": "load_shed", "queue": len(self.queue)})
+            raise QueueFullError(
+                f"admission queue full ({len(self.queue)} >= max_queue={mq})"
+            )
         req = Request(
             uid=self._uid,
             prompt=prompt,
             max_new_tokens=max_new_tokens or self.scfg.max_new_tokens,
+            deadline=(
+                None if deadline_s is None else time.monotonic() + deadline_s
+            ),
         )
         self._uid += 1
         self.queue.append(req)
         return req
+
+    def cancel(self, uid: int) -> bool:
+        """Retire a queued or in-flight request host-side.
+
+        The request resolves immediately (``done=True``,
+        ``status="cancelled"``, tokens so far kept); an occupied slot is
+        released through the normal retirement machinery, so the next
+        admission reuses it.  For the StreamEngine the device round in
+        progress is untouched — the cancelled slot simply stops
+        re-entering at the next round boundary, exactly like an EOS
+        retirement.  Returns False for unknown/finished uids.
+        """
+        for req in list(self.queue):
+            if req.uid == uid and not req.done:
+                self.queue.remove(req)
+                req.done, req.status = True, "cancelled"
+                self.events.append({"event": "cancel", "uid": uid})
+                return True
+        for slot, req in enumerate(self.active):
+            if req is not None and req.uid == uid and not req.done:
+                req.done, req.status = True, "cancelled"
+                self._retire_slot(slot)
+                self.events.append({"event": "cancel", "uid": uid})
+                return True
+        return False
 
     def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
         finished = []
         for _ in range(max_steps):
             finished.extend(self.step())
             if not self.queue and all(r is None for r in self.active):
-                break
-        return finished
+                return finished
+        undrained = sorted(
+            [r.uid for r in self.queue]
+            + [r.uid for r in self.active if r is not None]
+        )
+        raise DrainTimeoutError(max_steps, undrained)
 
     def step(self) -> list[Request]:  # pragma: no cover - abstract
         raise NotImplementedError
@@ -167,6 +262,33 @@ class _EngineBase:
             if r is None:
                 return i
         return None
+
+    def _retire_slot(self, slot: int) -> None:
+        """Release a slot host-side (cancel/expiry); cache rows are
+        stale-but-inert until the next admission overwrites them."""
+        self.active[slot] = None
+
+    def _expire_deadlines(self) -> list[Request]:
+        """Resolve requests whose deadline has passed; returns them.
+        Called at each step boundary — queued requests are dropped
+        before ever prefetching, in-flight ones retire their slot."""
+        now = time.monotonic()
+        expired = []
+        for req in list(self.queue):
+            if req.deadline is not None and now >= req.deadline:
+                self.queue.remove(req)
+                req.done, req.status = True, "expired"
+                expired.append(req)
+        for slot, req in enumerate(self.active):
+            if req is not None and req.deadline is not None and now >= req.deadline:
+                req.done, req.status = True, "expired"
+                self._retire_slot(slot)
+                expired.append(req)
+        if expired:
+            self.events.append(
+                {"event": "expired", "uids": [r.uid for r in expired]}
+            )
+        return expired
 
     def _sample_host(self, logits_row: np.ndarray, uid: int, ngen: int) -> int:
         if self.scfg.temperature <= 0:
@@ -261,7 +383,8 @@ class Engine(_EngineBase):
 
     def step(self) -> list[Request]:
         """Admit, one batched decode step, retire. Returns newly finished."""
-        finished = self._admit()
+        finished = self._expire_deadlines()
+        finished.extend(self._admit())
         slots = [i for i, r in enumerate(self.active) if r is not None]
         if not slots:
             return finished
@@ -464,6 +587,31 @@ class StreamEngine(_EngineBase):
         self.kernels = resolve_mode(
             cfg.kernels if pcfg.kernels is None else pcfg.kernels
         )
+        self.degraded = False
+        if self.kernels == "pallas":
+            # Probe the fused-kernel dispatch up front: an import-level
+            # failure degrades here, before any request is accepted.
+            try:
+                from repro.kernels import get_impl
+
+                get_impl("decode_attention", "pallas")
+                get_impl("emit_norm_logits", "pallas")
+            except Exception as e:  # noqa: BLE001
+                self._degrade("kernel import failed", e)
+        self._zero_single = T.init_cache(cfg, 1, scfg.max_len)
+        self._embed = jax.jit(
+            lambda toks: L.embed_lookup(params["embed"]["embedding"], toks)
+        )
+        self._by_uid: dict[int, Request] = {}
+        self._build_programs()
+
+    def _build_programs(self):
+        """(Re)build the decode cells, emit, and jitted round under the
+        current ``self.kernels`` mode.  Called at init and again by
+        ``_degrade`` — the round must be re-jitted, not just re-pointed,
+        since jit caches trace the old cell bodies."""
+        cfg, scfg, pcfg = self.cfg, self.scfg, self.pcfg
+        params = self.params
         self._cell_fn = T.make_decode_cell(
             cfg,
             num_cells=pcfg.num_cells,
@@ -481,12 +629,6 @@ class StreamEngine(_EngineBase):
             max_len=scfg.max_len,
             kernels=self.kernels,
         )
-        self._zero_single = T.init_cache(cfg, 1, scfg.max_len)
-        self._embed = jax.jit(
-            lambda toks: L.embed_lookup(params["embed"]["embedding"], toks)
-        )
-        self._by_uid: dict[int, Request] = {}
-
         t_, m_ = pcfg.round_steps, pcfg.microbatches
 
         def _round(cell_consts, cell_states, init_items, overlay_items):
@@ -506,6 +648,25 @@ class StreamEngine(_EngineBase):
         # per-call warning there.)
         donate = (1,) if jax.default_backend() != "cpu" else ()
         self._round = jax.jit(_round, donate_argnums=donate)
+
+    def _degrade(self, reason: str, exc: Exception):
+        """Fall back from the fused pallas path to the bitwise-identical
+        xla path.  Served tokens are unchanged (the xla refs are the
+        kernels' oracles); the event is logged, never swallowed."""
+        self.degraded = True
+        self.kernels = "xla"
+        self.events.append({
+            "event": "degraded", "from": "pallas", "to": "xla",
+            "reason": reason, "error": f"{type(exc).__name__}: {exc}",
+        })
+        warnings.warn(
+            f"StreamEngine degraded kernels=pallas -> xla ({reason}: "
+            f"{type(exc).__name__}: {exc}); serving continues bit-identically",
+            RuntimeWarning,
+            stacklevel=3,
+        )
+        if hasattr(self, "_round"):  # runtime degrade: rebuild the round
+            self._build_programs()
 
     @property
     def cache(self) -> PyTree:
@@ -640,7 +801,9 @@ class StreamEngine(_EngineBase):
         """One pipelined round of ``round_steps`` decode steps."""
         t_, m_ = self.pcfg.round_steps, self.pcfg.microbatches
         bm = self.mb_size
-        admissions, finished = self._plan_admissions(t_)
+        finished = self._expire_deadlines()
+        admissions, planned = self._plan_admissions(t_)
+        finished.extend(planned)
         for slot, req in enumerate(self.active):
             if req is not None:
                 self._by_uid[req.uid] = req
@@ -650,10 +813,24 @@ class StreamEngine(_EngineBase):
         # The admission payload is read-only within a round, so it rides
         # const_state — it never enters the mutable carry, and nothing
         # needs dropping afterwards (const state is not returned).
-        new_states, collected = self._round(
-            {**self.cell_consts, "adm": adm},
-            self.cell_states, init_items, overlay,
-        )
+        try:
+            new_states, collected = self._round(
+                {**self.cell_consts, "adm": adm},
+                self.cell_states, init_items, overlay,
+            )
+        except (KeyboardInterrupt, SystemExit):
+            raise
+        except Exception as e:  # noqa: BLE001
+            if self.kernels != "pallas":
+                raise
+            # Fused-kernel dispatch failed at trace/compile time:
+            # degrade to the xla cells (bitwise-identical tokens) and
+            # replay the identical round inputs.
+            self._degrade("round dispatch failed", e)
+            new_states, collected = self._round(
+                {**self.cell_consts, "adm": adm},
+                self.cell_states, init_items, overlay,
+            )
         self.cell_states = new_states
         col = {
             k: np.asarray(collected[k])

@@ -1,0 +1,358 @@
+"""Round-supervised serving: zero-loss fault recovery for the engines.
+
+``ServeSupervisor`` wraps any serving engine (``Engine`` or
+``StreamEngine`` — anything with the ``submit/step/run_until_drained``
+contract and host-visible state) with the serving half of the
+:mod:`repro.resilience` runbook:
+
+* **snapshot/restore** — before every round, the complete in-flight
+  state is snapshotted to host memory: the KV caches / cell states, the
+  slot bookkeeping (``lengths``/``active``), the admission queue, the
+  uid counter, and every live request's mutable fields.  A failed round
+  restores the snapshot and replays.  Replay is *bitwise*: sampling
+  derives from ``(seed, uid, ngen)`` (see ``sample_token``), admissions
+  re-plan identically from the restored queue, and prefill/decode are
+  deterministic — so a recovered serve emits exactly the tokens of a
+  fault-free run.
+* **watchdog deadline** — a round slower than ``deadline_s`` is treated
+  as wedged: its results are discarded (snapshot restore) and the round
+  replays.  Detection here is at the round boundary (single-process
+  container); the in-flight heartbeat file
+  (:class:`repro.resilience.Heartbeat`) is the channel an *external*
+  supervisor uses to SIGKILL a worker that never reaches the boundary.
+* **numerics poisoning** — after each round the engine's float cache
+  state is checked for NaN/inf; a poisoned round restores and replays
+  (with the poison source gone, e.g. a transient hardware fault, the
+  replay is clean and bitwise).
+* **bounded retry with backoff** — each round gets a fresh
+  :class:`repro.resilience.RestartBudget`; an exhausted budget re-raises
+  and counts the unresolved accepted requests in
+  ``stats["requests_lost"]`` (the chaos gate pins this to zero).
+* **graceful SIGTERM drain** — ``install_signal_handlers()`` turns
+  SIGTERM into "stop accepting, finish everything accepted": ``submit``
+  starts raising :class:`DrainingError`, and the drain loop runs every
+  queued + in-flight request to completion before returning.
+
+Fault injection (the chaos battery's entry point) is a
+:mod:`repro.resilience.injection` callable invoked with
+``(round_index, engine)`` before each round attempt —
+:func:`chaos_injector` builds the standard fault classes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import signal
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.resilience import Heartbeat, RestartBudget, RestartPolicy, StragglerTracker
+from repro.resilience.injection import InjectedFault, OneShotInjector, call_injector
+from repro.serve.engine import DrainTimeoutError, Request
+
+PyTree = Any
+
+
+class RoundFault(RuntimeError):
+    """Base class for supervisor-detected round failures."""
+
+
+class WatchdogTimeout(RoundFault):
+    """The round exceeded the supervisor's deadline (wedge)."""
+
+
+class NumericsFault(RoundFault):
+    """NaN/inf detected in the engine's cache state after a round."""
+
+
+class DrainingError(RuntimeError):
+    """submit() after SIGTERM/drain was requested (admission closed)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SupervisorConfig:
+    deadline_s: float | None = None   # round watchdog; None disables
+    max_restarts: int = 3             # per-round retry budget
+    backoff_seconds: float = 0.0      # retry backoff (0 = immediate)
+    backoff_factor: float = 2.0
+    check_numerics: bool = True       # NaN/inf cache scan per round
+    heartbeat_path: str | None = None
+    straggler_factor: float = 2.0     # round-time EMA surfacing
+
+
+@dataclasses.dataclass
+class Snapshot:
+    """Host-side copy of the complete in-flight engine state."""
+
+    device: PyTree                      # cache (Engine) / cell_states (Stream)
+    lengths: np.ndarray
+    active_uids: list[int | None]
+    queue_uids: list[int]
+    requests: dict[int, Request]        # uid -> live handle
+    req_state: dict[int, tuple[list[int], bool, str]]  # mutable fields
+    uid_counter: int
+
+
+def _device_state(engine) -> PyTree:
+    """The engine's device-resident mutable state (cache shards)."""
+    return engine.cell_states if hasattr(engine, "cell_states") else engine.cache
+
+
+def _set_device_state(engine, tree: PyTree) -> None:
+    if hasattr(engine, "cell_states"):
+        engine.cell_states = tree
+    else:
+        engine.cache = tree
+
+
+class ServeSupervisor:
+    """Wrap an engine with snapshot/replay fault recovery.
+
+    The supervisor owns the step loop: call ``submit``/``cancel``/
+    ``step``/``run_until_drained`` on the supervisor, not the engine.
+    Each ``step()`` is one supervised round: snapshot, (optionally
+    inject,) run, verify deadline + numerics — and on any fault,
+    restore + replay under a bounded restart budget.
+    """
+
+    def __init__(
+        self,
+        engine,
+        cfg: SupervisorConfig | None = None,
+        fail_injector: Callable | None = None,
+        on_event: Callable[[dict], None] | None = None,
+    ):
+        self.engine = engine
+        self.cfg = cfg or SupervisorConfig()
+        self.fail_injector = fail_injector
+        self.on_event = on_event
+        self.events: list[dict] = []
+        self.stats = {
+            "rounds": 0, "faults": 0, "restarts": 0,
+            "requests_lost": 0, "stragglers": 0,
+        }
+        self._round_idx = 0
+        self._draining = False
+        self._hb = Heartbeat(self.cfg.heartbeat_path)
+        self._straggler = StragglerTracker(self.cfg.straggler_factor)
+        self._policy = RestartPolicy(
+            max_restarts=self.cfg.max_restarts,
+            backoff_seconds=self.cfg.backoff_seconds,
+            backoff_factor=self.cfg.backoff_factor,
+        )
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def install_signal_handlers(self):
+        signal.signal(signal.SIGTERM, self.request_drain)
+
+    def request_drain(self, *_):
+        """SIGTERM handler: close admission, keep serving until drained."""
+        if not self._draining:
+            self._draining = True
+            self._event({"event": "drain_requested"})
+
+    @property
+    def draining(self) -> bool:
+        return self._draining
+
+    def submit(self, *args, **kwargs) -> Request:
+        if self._draining:
+            raise DrainingError("supervisor is draining; admission closed")
+        return self.engine.submit(*args, **kwargs)
+
+    def cancel(self, uid: int) -> bool:
+        return self.engine.cancel(uid)
+
+    def drained(self) -> bool:
+        eng = self.engine
+        return not eng.queue and all(r is None for r in eng.active)
+
+    # -- snapshot / restore --------------------------------------------------
+
+    def snapshot(self) -> Snapshot:
+        """Copy the complete in-flight state to host memory.
+
+        ``np.array`` (not ``asarray``) so the copy never aliases device
+        buffers — restore after a donated round must not read reused
+        memory.
+        """
+        eng = self.engine
+        live: dict[int, Request] = {}
+        for req in list(eng.queue) + [r for r in eng.active if r is not None]:
+            live[req.uid] = req
+        return Snapshot(
+            device=jax.tree.map(
+                lambda l: np.array(l), jax.device_get(_device_state(eng))
+            ),
+            lengths=eng.lengths.copy(),
+            active_uids=[r.uid if r is not None else None for r in eng.active],
+            queue_uids=[r.uid for r in eng.queue],
+            requests=live,
+            req_state={
+                uid: (list(r.out_tokens), r.done, r.status)
+                for uid, r in live.items()
+            },
+            uid_counter=eng._uid,
+        )
+
+    def restore(self, snap: Snapshot) -> None:
+        """Roll the engine (and every live request handle) back."""
+        eng = self.engine
+        _set_device_state(eng, jax.tree.map(jnp.asarray, snap.device))
+        eng.lengths = snap.lengths.copy()
+        for uid, (toks, done, status) in snap.req_state.items():
+            req = snap.requests[uid]
+            req.out_tokens = list(toks)
+            req.done = done
+            req.status = status
+        eng.active = [
+            snap.requests[uid] if uid is not None else None
+            for uid in snap.active_uids
+        ]
+        eng.queue.clear()
+        eng.queue.extend(snap.requests[uid] for uid in snap.queue_uids)
+        eng._uid = snap.uid_counter
+        if hasattr(eng, "_by_uid"):
+            eng._by_uid = {
+                r.uid: r for r in eng.active if r is not None
+            }
+
+    # -- fault detection -----------------------------------------------------
+
+    def _check_numerics(self):
+        """NaN/inf scan over the engine's float cache state.  One
+        all-reduce per leaf; skipped when ``check_numerics`` is off."""
+        for leaf in jax.tree.leaves(_device_state(self.engine)):
+            if not jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.inexact):
+                continue
+            if not bool(jnp.isfinite(leaf).all()):
+                raise NumericsFault(
+                    "non-finite values in engine cache state "
+                    "(poisoned logits/KV rows)"
+                )
+
+    def _event(self, ev: dict):
+        self.events.append(ev)
+        if self.on_event:
+            self.on_event(ev)
+
+    def _unresolved(self) -> list[int]:
+        eng = self.engine
+        return sorted(
+            [r.uid for r in eng.queue if not r.done]
+            + [r.uid for r in eng.active if r is not None and not r.done]
+        )
+
+    # -- the supervised round ------------------------------------------------
+
+    def step(self) -> list[Request]:
+        """One supervised round: snapshot → run → verify, replay on fault."""
+        snap = self.snapshot()
+        budget = RestartBudget(self._policy)
+        while True:
+            t0 = time.monotonic()
+            try:
+                call_injector(self.fail_injector, self._round_idx, self.engine)
+                finished = self.engine.step()
+                dt = time.monotonic() - t0
+                if self.cfg.deadline_s is not None and dt > self.cfg.deadline_s:
+                    raise WatchdogTimeout(
+                        f"round {self._round_idx} took {dt:.3f}s "
+                        f"> deadline {self.cfg.deadline_s}s"
+                    )
+                if self.cfg.check_numerics:
+                    self._check_numerics()
+            except (KeyboardInterrupt, SystemExit):
+                raise
+            except Exception as e:  # noqa: BLE001 — any fault: replay
+                self.stats["faults"] += 1
+                self._event({
+                    "event": "round_fault", "round": self._round_idx,
+                    "error": f"{type(e).__name__}: {e}",
+                    "attempt": budget.restarts,
+                })
+                if not budget.admit():
+                    lost = self._unresolved()
+                    self.stats["requests_lost"] += len(lost)
+                    self._event({
+                        "event": "gave_up", "round": self._round_idx,
+                        "requests_lost": lost,
+                    })
+                    raise
+                self.stats["restarts"] += 1
+                time.sleep(budget.next_delay())
+                self.restore(snap)
+                continue
+            if self._straggler.observe(self._round_idx, dt):
+                self.stats["stragglers"] += 1
+            self._hb.beat(self._round_idx)
+            self._round_idx += 1
+            self.stats["rounds"] += 1
+            return finished
+
+    def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
+        """Drain every accepted request under supervision.
+
+        When draining was requested (SIGTERM), this is the graceful
+        exit: everything accepted completes, nothing new enters.
+        """
+        finished = []
+        for _ in range(max_steps):
+            finished.extend(self.step())
+            if self.drained():
+                if self._draining:
+                    self._event({"event": "drained"})
+                return finished
+        undrained = self._unresolved()
+        self.stats["requests_lost"] += len(undrained)
+        raise DrainTimeoutError(max_steps, undrained)
+
+
+# -- chaos injection (the standard fault classes) ----------------------------
+
+
+def poison_cache(engine) -> None:
+    """NaN-poison the engine's float cache state (simulated bad HBM /
+    overflowed logits).  Detection is the supervisor's numerics scan."""
+    poisoned = jax.tree.map(
+        lambda l: (
+            jnp.full_like(l, jnp.nan)
+            if jnp.issubdtype(jnp.asarray(l).dtype, jnp.inexact)
+            else l
+        ),
+        _device_state(engine),
+    )
+    _set_device_state(engine, poisoned)
+
+
+def chaos_injector(
+    kind: str, at_round: int, *, wedge_seconds: float = 1.0
+) -> OneShotInjector:
+    """The chaos battery's fault classes, as one-shot injectors.
+
+    * ``"raise"``   — the round attempt raises :class:`InjectedFault`
+      (a mid-round exception: kernel crash, collective failure, ...).
+    * ``"nan"``     — the cache state is NaN-poisoned before the round;
+      the numerics scan catches it after.
+    * ``"wedge"``   — the round stalls ``wedge_seconds`` (must exceed
+      the supervisor's ``deadline_s`` to trip the watchdog).
+    * ``"sigterm"`` — SIGTERM is delivered to this process mid-serve;
+      with handlers installed the supervisor drains gracefully.
+    """
+    def _raise(eng):
+        raise InjectedFault(f"injected round failure at round {at_round}")
+
+    actions = {
+        "raise": _raise,
+        "nan": poison_cache,
+        "wedge": lambda eng: time.sleep(wedge_seconds),
+        "sigterm": lambda eng: os.kill(os.getpid(), signal.SIGTERM),
+    }
+    if kind not in actions:
+        raise ValueError(f"chaos kind {kind!r}; expected one of {sorted(actions)}")
+    return OneShotInjector(at_round, actions[kind])

@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import time
 from typing import Any
@@ -94,10 +95,14 @@ class Checkpointer:
     def all_steps(self) -> list[int]:
         out = []
         for name in os.listdir(self.directory):
-            if name.startswith("step_") and not name.endswith(".tmp0"):
-                path = os.path.join(self.directory, name, "manifest.json")
-                if os.path.exists(path):
-                    out.append(int(name.split("_")[1]))
+            # A crash mid-write leaves a stale ``step_N.tmpP`` dir for
+            # whatever process index P was writing — only exact
+            # ``step_<digits>`` names are complete checkpoints.
+            if not re.fullmatch(r"step_\d+", name):
+                continue
+            path = os.path.join(self.directory, name, "manifest.json")
+            if os.path.exists(path):
+                out.append(int(name.split("_")[1]))
         return sorted(out)
 
     def latest_step(self) -> int | None:

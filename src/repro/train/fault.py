@@ -1,17 +1,23 @@
 """Fault tolerance: checkpoint/restart, heartbeats, straggler mitigation.
 
 ``ResilientLoop`` wraps the jitted train step with the runbook a 1000+
-node fleet needs:
+node fleet needs, built on the shared :mod:`repro.resilience` package
+(the same machinery the serving supervisor consumes — see
+:mod:`repro.serve.supervisor`):
 
 * **checkpoint/restart** — periodic async checkpoints; on any step
   exception the loop restores the latest checkpoint and replays.  The
   data pipeline is step-keyed (deterministic PRNG per step), so replayed
-  steps see identical batches — restart is bitwise reproducible.
-* **heartbeats** — a monotonic per-step heartbeat file; an external
-  supervisor (or the test suite) detects a wedged worker by heartbeat age
-  and SIGKILLs it, landing in the restart path above.
-* **straggler mitigation** — per-step wall times feed an EMA; steps slower
-  than ``straggler_factor``× the EMA are counted and surfaced.  On a real
+  steps see identical batches — restart is bitwise reproducible, and
+  ``history`` records each step exactly once (replayed entries are
+  truncated back to the restored step on restart).
+* **heartbeats** — a monotonic per-step heartbeat file
+  (:class:`repro.resilience.Heartbeat`); an external supervisor (or the
+  test suite) detects a wedged worker by heartbeat age and SIGKILLs it,
+  landing in the restart path above.
+* **straggler mitigation** — per-step wall times feed an EMA
+  (:class:`repro.resilience.StragglerTracker`); steps slower than
+  ``straggler_factor``× the EMA are counted and surfaced.  On a real
   pod the action is to cordon the slow host and re-shard (see
   :mod:`repro.train.elastic`); here the detector + policy hook are real
   and the cordon action is a callback.
@@ -21,13 +27,14 @@ node fleet needs:
 from __future__ import annotations
 
 import dataclasses
-import os
 import signal
 import time
 from typing import Any, Callable
 
 import jax
 
+from repro.resilience import Heartbeat, RestartBudget, RestartPolicy, StragglerTracker
+from repro.resilience.injection import call_injector
 from repro.train.checkpoint import Checkpointer
 
 PyTree = Any
@@ -40,6 +47,7 @@ class FaultConfig:
     straggler_factor: float = 2.0
     straggler_ema: float = 0.9
     max_restarts: int = 3
+    backoff_seconds: float = 0.0  # restart backoff; 0 = immediate replay
 
 
 class ResilientLoop:
@@ -55,7 +63,10 @@ class ResilientLoop:
         self.cfg = fault_cfg
         self.on_straggler = on_straggler
         self._stop = False
-        self._ema_step_time: float | None = None
+        self._hb = Heartbeat(fault_cfg.heartbeat_path)
+        self._straggler = StragglerTracker(
+            fault_cfg.straggler_factor, fault_cfg.straggler_ema, on_straggler
+        )
         self.stats = {"restarts": 0, "stragglers": 0, "steps": 0}
 
     def request_stop(self, *_):
@@ -65,20 +76,11 @@ class ResilientLoop:
         signal.signal(signal.SIGTERM, self.request_stop)
 
     def _heartbeat(self, step: int):
-        if self.cfg.heartbeat_path:
-            with open(self.cfg.heartbeat_path, "w") as f:
-                f.write(f"{step} {time.time()}\n")
+        self._hb.beat(step)
 
     def _track_time(self, step: int, dt: float):
-        if self._ema_step_time is None:
-            self._ema_step_time = dt
-            return
-        if dt > self.cfg.straggler_factor * self._ema_step_time:
+        if self._straggler.observe(step, dt):
             self.stats["stragglers"] += 1
-            if self.on_straggler:
-                self.on_straggler(step, dt / self._ema_step_time)
-        a = self.cfg.straggler_ema
-        self._ema_step_time = a * self._ema_step_time + (1 - a) * dt
 
     def run(
         self,
@@ -92,14 +94,16 @@ class ResilientLoop:
         """Run to ``num_steps`` with restart-on-failure.  Returns final state."""
         step = start_step
         history: list[dict] = []
-        restarts_left = self.cfg.max_restarts
+        budget = RestartBudget(RestartPolicy(
+            max_restarts=self.cfg.max_restarts,
+            backoff_seconds=self.cfg.backoff_seconds,
+        ))
         # Restart-from-nothing must replay from the *initial* state, not
         # whatever the params had mutated to when the step blew up.
         init_params, init_opt_state = params, opt_state
         while step < num_steps and not self._stop:
             try:
-                if fail_injector is not None:
-                    fail_injector(step)
+                call_injector(fail_injector, step, self)
                 batch = batch_fn(step)
                 t0 = time.perf_counter()
                 params, opt_state, metrics = self.step_fn(
@@ -121,20 +125,27 @@ class ResilientLoop:
             except (KeyboardInterrupt, SystemExit):
                 raise
             except Exception:
-                if restarts_left <= 0:
+                if not budget.admit():
                     raise
-                restarts_left -= 1
                 self.stats["restarts"] += 1
+                time.sleep(budget.next_delay())
                 restored_step = self.ckpt.latest_step()
                 if restored_step is None:
                     # No checkpoint yet: restart from the initial state.
                     params, opt_state = init_params, init_opt_state
                     step = start_step
-                    continue
-                state, step = self.ckpt.restore(
-                    {"params": params, "opt_state": opt_state}
-                )
-                params, opt_state = state["params"], state["opt_state"]
+                else:
+                    state, step = self.ckpt.restore(
+                        {"params": params, "opt_state": opt_state}
+                    )
+                    params, opt_state = state["params"], state["opt_state"]
+                # The replay will re-run steps >= the restored step: drop
+                # their history entries so each step is recorded exactly
+                # once and stats["steps"] counts completed steps, not
+                # completed-plus-replayed.
+                kept = [h for h in history if h["step"] < step]
+                self.stats["steps"] -= len(history) - len(kept)
+                history[:] = kept
         self.ckpt.save(step, {"params": params, "opt_state": opt_state})
         self.ckpt.wait()
         return params, opt_state, step, history

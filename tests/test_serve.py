@@ -363,3 +363,39 @@ class TestServeBenchGate:
         xla = [dict(self._rec(tok_s=80.0), kernels="xla")]
         out = check_serve_regressions(legacy, xla, 0.10)
         assert len(out) == 1 and out[0]["batch"] == 8
+
+    def _chaos_rec(self, lost=0, bitwise=True):
+        return {
+            "engine": "chaos_sequential", "schedule": "-", "devices": 1,
+            "interleave": 1, "batch": 8, "dim": 0,
+            "requests_lost": lost, "bitwise_equal": bitwise,
+            "recovery_overhead_seconds": 0.1,
+        }
+
+    def test_chaos_zero_loss_passes(self):
+        from benchmarks.run import check_serve_regressions
+
+        assert check_serve_regressions([], [self._chaos_rec()], 0.10) == []
+
+    def test_chaos_lost_request_flags_without_baseline(self):
+        """The chaos invariant is absolute — it fires on the fresh run
+        alone, with no matching baseline cell required."""
+        from benchmarks.run import check_serve_regressions
+
+        out = check_serve_regressions([], [self._chaos_rec(lost=2)], 0.10)
+        assert len(out) == 1 and out[0]["requests_lost"] == 2
+
+    def test_chaos_bitwise_mismatch_flags(self):
+        from benchmarks.run import check_serve_regressions
+
+        out = check_serve_regressions(
+            [], [self._chaos_rec(bitwise=False)], 0.10)
+        assert len(out) == 1 and out[0]["bitwise_equal"] is False
+
+    def test_chaos_cells_skip_throughput_gate(self):
+        """Chaos cells carry no tokens_per_sec, so they never trip the
+        throughput comparator even when a baseline chaos cell exists."""
+        from benchmarks.run import check_serve_regressions
+
+        assert check_serve_regressions(
+            [self._chaos_rec()], [self._chaos_rec()], 0.10) == []

@@ -113,6 +113,24 @@ class TestCheckpoint:
         names = os.listdir(tmp_path)
         assert all(not n.endswith(".tmp0") for n in names)
 
+    def test_crashed_write_tmp_dirs_never_restore(self, tmp_path):
+        """A crash mid-write leaves ``step_N.tmpP`` for whatever process
+        index P was writing — ``all_steps`` must skip them all, even
+        with a complete-looking manifest inside (regression: only
+        ``.tmp0`` used to be filtered)."""
+        ckpt = Checkpointer(str(tmp_path))
+        ckpt.save(2, {"x": jnp.ones(4)}, blocking=True)
+        for proc in (0, 3):
+            crashed = tmp_path / f"step_{9:08d}.tmp{proc}"
+            crashed.mkdir()
+            (crashed / "manifest.json").write_text(
+                '{"step": 9, "process": %d}' % proc
+            )
+        assert ckpt.all_steps() == [2]
+        assert ckpt.latest_step() == 2
+        restored, step = ckpt.restore({"x": jnp.ones(4)})
+        assert step == 2
+
 
 class TestFaultTolerance:
     def _mini_step(self):
@@ -147,6 +165,53 @@ class TestFaultTolerance:
             {"w": jnp.ones(2)}, {}, lambda s: {"g": jnp.ones(2)}, num_steps=5
         )
         np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(params_clean["w"]))
+
+    def test_restart_history_counts_each_step_once(self, tmp_path):
+        """Regression: replayed steps used to append duplicate history
+        entries (and inflate stats["steps"]).  After a crash at step 3
+        restores the step-2 checkpoint, steps 2..3 re-run — history must
+        still record each step exactly once."""
+        ckpt = Checkpointer(str(tmp_path))
+        loop = ResilientLoop(
+            self._mini_step(), ckpt,
+            FaultConfig(checkpoint_every=2, max_restarts=2),
+        )
+        crashed = {"done": False}
+
+        def injector(step):
+            if step == 3 and not crashed["done"]:
+                crashed["done"] = True
+                raise RuntimeError("simulated node failure")
+
+        _, _, step, history = loop.run(
+            {"w": jnp.ones(2)}, {}, lambda s: {"g": jnp.ones(2)},
+            num_steps=5, fail_injector=injector,
+        )
+        assert step == 5
+        assert [h["step"] for h in history] == [0, 1, 2, 3, 4]
+        assert loop.stats["steps"] == 5
+
+    def test_restart_before_any_checkpoint_truncates_history(self, tmp_path):
+        """Crash before the first checkpoint restarts from the initial
+        state — every completed step replays, so history resets too."""
+        loop = ResilientLoop(
+            self._mini_step(), Checkpointer(str(tmp_path)),
+            FaultConfig(checkpoint_every=100, max_restarts=2),
+        )
+        crashed = {"done": False}
+
+        def injector(step):
+            if step == 2 and not crashed["done"]:
+                crashed["done"] = True
+                raise RuntimeError("early failure")
+
+        _, _, step, history = loop.run(
+            {"w": jnp.ones(2)}, {}, lambda s: {"g": jnp.ones(2)},
+            num_steps=4, fail_injector=injector,
+        )
+        assert step == 4
+        assert [h["step"] for h in history] == [0, 1, 2, 3]
+        assert loop.stats["steps"] == 4 and loop.stats["restarts"] == 1
 
     def test_straggler_detection(self, tmp_path):
         seen = []
